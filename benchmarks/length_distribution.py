@@ -1,0 +1,18 @@
+"""Paper Tables 1-2 — sequence-length distribution of the synthetic samplers
+vs the paper's reported CDFs."""
+from repro.data.synthetic import (LongTailSampler, LMSYS_CDF, PAPER_EVAL_CDF)
+
+
+def run(n=50_000):
+    print("dataset,bucket,sampled_cdf,paper_cdf")
+    for name, cdf in [("paper_eval(T2)", PAPER_EVAL_CDF),
+                      ("lmsys(T1)", LMSYS_CDF)]:
+        s = LongTailSampler(cdf, seed=0)
+        stats = s.bucket_stats(n)
+        for ub, target in cdf[:-1]:
+            print(f"{name},<{ub},{stats[ub]:.5f},{target}")
+        print(f"{name},max,{stats['max']},{cdf[-1][0]}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Paper Fig. 1 + Table 5 — memory footprint model.
+
+ChunkFlow's peak memory is linear:  peak = W + A*ChunkSize*K + V*context
+  W  — weights + grads + optimizer shard (per GPU)
+  A  — live activation bytes per chunk token (selective recompute, TP4/SP)
+  V  — stored K/V state bytes per context token (the paper keeps all K/V)
+
+The three coefficients are IDENTIFIED FROM the paper's Table 5 itself
+(6 measurements, 3 unknowns, overdetermined):
+    A: (47.5-41.6)/2048 = (59.3-47.5)/4096 = 2.88 MB/token  (consistent!)
+    V: (45.6-41.6)/224K ~= (63.8-59.3)/224K ~= 18 KB/token
+    W: 41.6 - 2048*A - 32K*V = 35.1 GB
+The model then PREDICTS all six cells within ~5% — i.e. the paper's central
+memory claim (peak ~= f(ChunkSize), context adds only the small K/V term) is
+internally consistent, and our scheduler's accounting
+(tests/test_chunked_equivalence.py: <=K live residual sets; statestore holds
+all K/V) matches that structure exactly.
+
+Fig. 1: micro-step memory across a sampled long-tail stream under the
+baseline (activations ~ sequence length) vs ChunkFlow (constant).
+"""
+import numpy as np
+
+from repro.data.synthetic import LongTailSampler, PAPER_EVAL_CDF
+
+W_GB = 35.1
+A_GB_PER_TOKEN = 2.88e-3
+V_GB_PER_TOKEN = 17.9e-6
+
+PAPER_TABLE5 = {  # (context, chunk_size) -> GiB
+    (32_768, 2048): 41.6, (262_144, 2048): 45.6,
+    (32_768, 4096): 47.5, (262_144, 4096): 50.8,
+    (32_768, 8192): 59.3, (262_144, 8192): 63.8,
+}
+
+
+def chunkflow_peak_gb(context_len, chunk_size, k=1):
+    return (W_GB + k * chunk_size * A_GB_PER_TOKEN
+            + context_len * V_GB_PER_TOKEN)
+
+
+def baseline_peak_gb(max_seq):
+    return W_GB + max_seq * A_GB_PER_TOKEN
+
+
+def run():
+    print("table5: context,chunk_size,model_gb,paper_gb,err%")
+    worst = 0.0
+    for (ctx, cs), paper in sorted(PAPER_TABLE5.items(),
+                                   key=lambda kv: (kv[0][1], kv[0][0])):
+        m = chunkflow_peak_gb(ctx, cs)
+        err = abs(m - paper) / paper * 100
+        worst = max(worst, err)
+        print(f"table5,{ctx},{cs},{m:.1f},{paper},{err:.1f}%")
+    assert worst < 6.0, f"Table 5 model error {worst:.1f}%"
+    # the paper's structural claims
+    for cs in (2048, 4096, 8192):
+        assert (chunkflow_peak_gb(262_144, cs)
+                - chunkflow_peak_gb(32_768, cs)) < 6.0   # K/V term only
+    assert (chunkflow_peak_gb(32_768, 8192)
+            > chunkflow_peak_gb(262_144, 2048))          # ChunkSize dominates
+
+    print("fig1: micro-step memory across 1000 sampled micro-steps")
+    s = LongTailSampler(PAPER_EVAL_CDF, seed=1, max_len=32 * 1024)
+    lens = [s.sample_length() for _ in range(1000)]
+    base = [baseline_peak_gb(l) for l in lens]
+    peak, p977 = max(base), float(np.percentile(base, 97.7))
+    print(f"fig1,baseline,peak_gb,{peak:.1f} (paper: 75)")
+    print(f"fig1,baseline,p97.7_gb,{p977:.1f} (paper: 97.7% of steps <45)")
+    cf = chunkflow_peak_gb(32 * 1024, 8192)
+    print(f"fig1,chunkflow,const_gb,{cf:.1f}")
+    assert p977 < 0.75 * peak            # the underutilization the paper shows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,109 @@
+"""§Roofline — three-term roofline per (arch x shape x mesh) from the
+dry-run's compiled artifacts (launch/dryrun.py --out dryrun_results.jsonl).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs     (197 TFLOP/s bf16 v5e)
+    memory     = HLO_bytes_per_device / HBM_bw         (819 GB/s)
+    collective = collective_bytes_per_device / link_bw (~50 GB/s ICI)
+
+HLO numbers come from launch/hlo_analysis.py (loop-trip-count-aware — XLA's
+own cost_analysis counts scan bodies once). MODEL_FLOPS = 6*N_active*tokens
+for training, 2*N_active*tokens for prefill/decode; the ratio over HLO FLOPs
+measures recompute/redundancy waste (remat target ~1/3 for full recompute).
+"""
+import json
+import sys
+
+from repro.configs.registry import ARCHS, get_arch, get_shape
+from repro.models import api
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def param_counts(cfg):
+    """(total_params, active_params_per_token)."""
+    shapes = jax.eval_shape(lambda k: api.init_params(cfg, k, max_seq=4096),
+                            jax.random.PRNGKey(0))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    if not cfg.num_experts:
+        return total, total
+    # active: experts contribute top-k/E of their weights
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    active = 0
+    for path, x in flat:
+        n = int(np.prod(x.shape))
+        names = str([getattr(p, "key", "") for p in path])
+        if ("'moe'" in names or "'moe_m'" in names or "'moe_a'" in names) \
+                and any(s in names for s in ("w_gate", "w_up", "w_down")):
+            n = n * cfg.experts_per_token // cfg.num_experts
+        active += n
+    return total, active
+
+
+def model_flops_per_device(arch, shape_name, n_chips):
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    total, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        f = 6.0 * active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        f = 2.0 * active * tokens
+    else:  # decode: one token per request
+        tokens = shape.global_batch
+        f = 2.0 * active * tokens
+    return f / n_chips, total, active
+
+
+def analyze_row(row):
+    chips = 512 if row["mesh"] == "2x16x16" else 256
+    t_c = row["flops"] / PEAK_FLOPS
+    t_m = row["hbm_bytes"] / HBM_BW
+    t_x = row["collective_total"] / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    mf, total, active = model_flops_per_device(row["arch"], row["shape"],
+                                               chips)
+    useful = mf / row["flops"] if row["flops"] else 0.0
+    hints = {
+        "compute": "cut recompute (remat policy) / skip non-causal blocks",
+        "memory": "fuse or shrink activation traffic; bigger microbatch",
+        "collective": "reshard to cut all-gathers; overlap collectives",
+    }
+    return {
+        "arch": row["arch"], "shape": row["shape"], "mesh": row["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom, "model_flops_per_dev": mf,
+        "useful_ratio": useful, "params_total": total,
+        "params_active": active, "hint": hints[dom],
+    }
+
+
+def run(path="dryrun_results.jsonl", mesh="16x16"):
+    try:
+        rows = [json.loads(l) for l in open(path)]
+    except FileNotFoundError:
+        print(f"roofline: {path} not found — run launch/dryrun.py --all first")
+        return []
+    out = []
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio")
+    for row in rows:
+        if row.get("skipped") or row.get("error"):
+            continue
+        if mesh and row["mesh"] != mesh:
+            continue
+        a = analyze_row(row)
+        out.append(a)
+        print(f"{a['arch']},{a['shape']},{a['mesh']},{a['compute_s']:.4f},"
+              f"{a['memory_s']:.4f},{a['collective_s']:.4f},{a['dominant']},"
+              f"{a['useful_ratio']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run(*(sys.argv[1:] or []))

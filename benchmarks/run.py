@@ -1,0 +1,89 @@
+"""Benchmark harness — one section per paper table/figure + microbenchmarks.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, n=5):
+    fn()                                   # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def micro_rows():
+    """name,us_per_call,derived microbenchmarks of the hot paths."""
+    from repro.core.chunking import construct_chunks
+    from repro.core.schedule_sim import chunks_to_microbatches, simulate_1f1b
+    from repro.data.synthetic import LongTailSampler, PAPER_EVAL_CDF
+    from repro.kernels import ops
+
+    rows = []
+    s = LongTailSampler(PAPER_EVAL_CDF, seed=0, max_len=262144)
+    lengths = dict(enumerate(s.sample_batch_lengths(256)))
+    us = _timeit(lambda: construct_chunks(lengths, 8192))
+    nch = len(construct_chunks(lengths, 8192))
+    rows.append(("alg1_chunk_construction_b256", us, f"chunks={nch}"))
+
+    chunks = construct_chunks(lengths, 8192)
+    mbs = chunks_to_microbatches(chunks, k=4)
+    us = _timeit(lambda: simulate_1f1b(mbs, 4, state_aware=True))
+    rows.append(("state_aware_1f1b_sim", us, f"mbs={len(mbs)}"))
+
+    B, T, P, Hq, Hkv, D = 1, 128, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, D))
+    k = jax.random.normal(ks[1], (B, P + T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, P + T, Hkv, D))
+    qp = (P + jnp.arange(T))[None]
+    kp = jnp.arange(P + T)[None]
+    ones_q = jnp.ones((B, T), jnp.int32)
+    ones_k = jnp.ones((B, P + T), jnp.int32)
+    f = lambda: ops.chunk_attention(q, k, v, qp, kp, ones_q, ones_k,
+                                    block_q=64, block_k=64).block_until_ready()
+    us = _timeit(f, n=3)
+    rows.append(("pallas_chunk_attention_interpret", us,
+                 f"T={T},P={P} (interpret mode — correctness proxy)"))
+    return rows
+
+
+def main() -> None:
+    print("=" * 70)
+    print("## Tables 1-2: length distributions")
+    from benchmarks import length_distribution
+    length_distribution.run(n=20_000)
+
+    print("=" * 70)
+    print("## Figs 2/6/7: pipeline bubble ratios")
+    from benchmarks import bubble_ratio
+    bubble_ratio.run()
+
+    print("=" * 70)
+    print("## Fig 1 + Table 5: memory model")
+    from benchmarks import memory_model
+    memory_model.run()
+
+    print("=" * 70)
+    print("## Fig 8 + Table 6: end-to-end iteration model")
+    from benchmarks import end_to_end
+    end_to_end.run()
+
+    print("=" * 70)
+    print("## Microbenchmarks")
+    print("name,us_per_call,derived")
+    for name, us, derived in micro_rows():
+        print(f"{name},{us:.0f},{derived}")
+
+    print("=" * 70)
+    print("## Roofline (from dryrun_results.jsonl if present)")
+    from benchmarks import roofline
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

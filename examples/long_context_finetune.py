@@ -1,0 +1,34 @@
+"""End-to-end long-context fine-tuning on the paper's length distribution.
+
+Trains a reduced mamba2 (SSD) model — the family where ChunkFlow's state is
+O(1) — for a few hundred steps on synthetic long-tail data, demonstrating:
+  * loss goes down (full substrate: data -> Alg1 -> Alg2 -> AdamW -> ckpt)
+  * peak live activations stay at K chunks regardless of sequence length
+
+    PYTHONPATH=src python examples/long_context_finetune.py [--steps 30]
+"""
+import argparse
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_arch
+from repro.launch.train import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=30)
+ap.add_argument("--arch", default="mamba2-130m")
+ap.add_argument("--chunk-size", type=int, default=128)
+ap.add_argument("--k", type=int, default=2)
+args = ap.parse_args()
+
+cfg = get_arch(args.arch).reduced()
+tc = TrainConfig(chunk_size=args.chunk_size, k_chunks=args.k,
+                 learning_rate=1e-3, total_steps=args.steps, warmup_steps=5)
+params, opt, history = train(cfg, tc, batch_per_step=8, max_len=1024,
+                             checkpoint_path="/tmp/chunkflow_ckpt.msgpack")
+
+first = sum(h["loss"] for h in history[:5]) / 5
+last = sum(h["loss"] for h in history[-5:]) / 5
+print(f"mean loss first5 {first:.3f} -> last5 {last:.3f}")
+assert last < first, "loss should decrease"
+assert all(h["peak_residuals"] <= tc.k_chunks for h in history)
+print("ok: loss decreased, activation bound held")

@@ -1,0 +1,49 @@
+"""Quickstart: ChunkFlow in ~40 lines.
+
+Build a long-tail batch, reorganize it with Algorithm 1, run Algorithm 2's
+state-aware schedule, and take an optimizer step — on a reduced Qwen-family
+config that runs on CPU in under a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.core import chunked_step, chunking
+from repro.models import api
+from repro.optim import adamw
+
+cfg = get_arch("qwen2.5-14b").reduced()      # 2 layers, d=256 — CPU friendly
+CHUNK_SIZE, K = 64, 1
+
+# --- a long-tail batch: one long sequence + several short ones -------------
+rng = np.random.RandomState(0)
+lengths = {0: 200, 1: 30, 2: 17, 3: 50, 4: 9}
+seqs = {i: rng.randint(1, cfg.vocab_size, size=l).astype(np.int32)
+        for i, l in lengths.items()}
+
+# --- Algorithm 1: chunk construction ----------------------------------------
+chunks = chunking.construct_chunks(lengths, CHUNK_SIZE)
+groups, standalone = chunking.group_chunks(chunks)
+print(f"{len(chunks)} chunks: {len(groups)} dependent group(s) "
+      f"({[len(g) for g in groups.values()]} chunks), "
+      f"{len(standalone)} packed standalone")
+
+# --- Algorithm 2: state-aware scheduling + gradient accumulation ------------
+params = api.init_params(cfg, jax.random.PRNGKey(0), max_seq=256)
+opt = adamw.adamw_init(params)
+
+to_dev = lambda c: {k: jax.numpy.asarray(v) for k, v in
+                    chunking.materialize_chunk(c, seqs).items()}
+gb = [[to_dev(c) for c in g] for g in groups.values()]
+sb = [to_dev(c) for c in standalone]
+
+for step in range(3):
+    loss, grads, stats = chunked_step.run_batch(cfg, params, gb, sb, k=K)
+    params, opt, gnorm = jax.jit(
+        lambda p, g, o: adamw.adamw_update(p, g, o, lr=1e-3))(params, grads, opt)
+    print(f"step {step}: loss {float(loss):.4f}  gnorm {float(gnorm):.2f}  "
+          f"peak live activations {stats.max_live_residuals} chunk(s) "
+          f"(K={K}), {stats.recompute_calls} recomputed forwards")
+print("ok")

@@ -1,0 +1,50 @@
+"""Msgpack pytree checkpointing (params + optimizer state + step)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack(obj):
+    leaves, treedef = jax.tree.flatten(obj)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [
+            {"dtype": str(np.asarray(l).dtype),
+             "shape": list(np.asarray(l).shape),
+             "data": np.ascontiguousarray(
+                 np.asarray(l).astype(
+                     np.float32 if np.asarray(l).dtype == jnp.bfloat16
+                     else np.asarray(l).dtype)).tobytes()}
+            for l in leaves
+        ],
+    }
+    return payload
+
+
+def save_checkpoint(path: str, tree, step: int = 0):
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb({"step": step, "tree": _pack(tree)}))
+    os.replace(tmp, path)
+
+
+def restore_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with open(path, "rb") as f:
+        blob = msgpack.unpackb(f.read())
+    leaves, treedef = jax.tree.flatten(like)
+    stored = blob["tree"]["leaves"]
+    assert len(stored) == len(leaves), (len(stored), len(leaves))
+    out = []
+    for ref, s in zip(leaves, stored):
+        dt = np.float32 if s["dtype"] == "bfloat16" else np.dtype(s["dtype"])
+        arr = np.frombuffer(s["data"], dtype=dt).reshape(s["shape"])
+        assert tuple(arr.shape) == tuple(np.asarray(ref).shape), \
+            (arr.shape, np.asarray(ref).shape)
+        out.append(jnp.asarray(arr, dtype=np.asarray(ref).dtype))
+    return jax.tree.unflatten(treedef, out), blob["step"]

@@ -1,0 +1,156 @@
+"""Config dataclasses shared by every architecture.
+
+Params are plain pytrees; a ModelConfig fully determines the param shapes and
+the forward semantics (family dispatch happens in models/api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                   # query heads (0 for attention-free)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # attention variants -----------------------------------------------------
+    qkv_bias: bool = False
+    logit_softcap: float = 0.0       # gemma2 final-logit softcap
+    attn_softcap: float = 0.0        # gemma2 attention-logit softcap
+    sliding_window: int = 0          # >0 -> local layers use this window
+    local_global_alternate: bool = False  # gemma2: even layers local, odd global
+    rope_theta: float = 1_000_000.0
+    mrope: bool = False              # qwen2-vl multimodal 3D RoPE
+    mrope_sections: tuple = (16, 24, 24)
+    tie_embeddings: bool = False
+    # MoE ---------------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # SSM (mamba2 / SSD) ------------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    # hybrid (jamba) ----------------------------------------------------------
+    attn_every: int = 0              # one attention layer per this many layers
+    # encoder-decoder (whisper) ----------------------------------------------
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500          # stub mel-frame count after conv frontend
+    # vlm stub ----------------------------------------------------------------
+    num_patches: int = 0             # stub precomputed patch embeds per sample
+    # numerics ----------------------------------------------------------------
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    # TP head padding: pad attention heads up to a multiple of this so the
+    # head dim shards over the model axis (0 = off; the dry-run/production
+    # path sets it to the TP size — pad lanes are dead weight, standard
+    # Megatron practice for head counts like yi's 56 or qwen2.5-14b's 40)
+    pad_heads_to: int = 0
+    # attention backend: "xla" (sdpa/blockwise jnp) or "pallas_interpret"
+    # (the TPU kernel executed in interpret mode — on real TPUs this becomes
+    # the compiled pallas_call)
+    attn_backend: str = "xla"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def padded_num_heads(self) -> int:
+        if not self.pad_heads_to or not self.num_heads:
+            return self.num_heads
+        p = self.pad_heads_to
+        return -(-self.num_heads // p) * p
+
+    @property
+    def padded_num_kv_heads(self) -> int:
+        hq = self.padded_num_heads
+        kv = self.num_kv_heads
+        if not kv:
+            return kv
+        while hq % kv:
+            kv += 1
+        return kv
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.d_model * self.ssm_expand) // self.ssm_head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.d_model * self.ssm_expand
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant of the same family: <=2 layers, d_model<=512,
+        <=4 experts. Keeps every structural flag (softcap, mrope, hybrid
+        interleave, ...) so the smoke test exercises the same code paths."""
+        d_model = min(self.d_model, 256)
+        heads = min(self.num_heads, 4) if self.num_heads else 0
+        kv = min(self.num_kv_heads, max(1, heads // 2)) if heads else 0
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=2 if self.attn_every == 0 else min(self.attn_every, 8),
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=(64 if self.num_heads else 0),
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=32 if self.ssm_state else self.ssm_head_dim,
+            ssm_chunk=16 if self.ssm_state else self.ssm_chunk,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 32),
+            num_patches=min(self.num_patches, 16),
+            attn_every=min(self.attn_every, 4) if self.attn_every else 0,
+            dtype="float32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    "train",   4_096,   256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768,  32),
+    "decode_32k":  InputShape("decode_32k",  "decode",  32_768,  128),
+    "long_500k":   InputShape("long_500k",   "decode",  524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """End-to-end training/ChunkFlow settings (paper §5)."""
+    chunk_size: int = 8_192
+    k_chunks: int = 1                # the paper's K
+    global_batch: int = 256
+    micro_batch: int = 1
+    learning_rate: float = 3e-5
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 10
+    total_steps: int = 100
+    optimizer: str = "adamw"         # adamw | adafactor
+    seed: int = 0

@@ -1,0 +1,20 @@
+"""Gemma-2 2B — local+global alternating attention, logit softcaps [arXiv:2408.00118]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256_000,
+    logit_softcap=30.0,
+    attn_softcap=50.0,
+    sliding_window=4096,
+    local_global_alternate=True,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,13 @@
+"""Granite-3 8B — llama-arch GQA [hf:ibm-granite/granite-3.0-2b-base family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-8b",
+    family="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=12_800,
+    vocab_size=49_155,
+)

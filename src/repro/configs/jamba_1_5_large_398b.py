@@ -1,0 +1,21 @@
+"""Jamba-1.5-large 398B — Mamba+attention 1:7 interleave, MoE 16e top-2
+[arXiv:2403.19887]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24_576,            # per-expert FFN width
+    vocab_size=65_536,
+    num_experts=16,
+    experts_per_token=2,
+    attn_every=8,           # 1 attention layer per 8 (7 mamba : 1 attn)
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+)

@@ -1,0 +1,16 @@
+"""Kimi K2 — trillion-param MoE (paper-table) [arXiv:2501.kimi2]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=112,          # 7168 / 64
+    d_ff=2048,             # per-expert FFN width
+    vocab_size=163_840,
+    num_experts=384,
+    experts_per_token=8,
+)

@@ -1,0 +1,17 @@
+"""Mamba2-130m — SSD (state-space duality), attention-free [arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,            # attention-free
+    num_kv_heads=0,
+    d_ff=0,                 # mamba block subsumes the MLP
+    vocab_size=50_280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,        # 24 SSD heads
+    ssm_chunk=256,
+)

@@ -1,0 +1,14 @@
+"""Qwen2.5-14B — GQA with QKV bias [hf:Qwen/Qwen2.5-0.5B family scaling]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=13_824,
+    vocab_size=152_064,
+    qkv_bias=True,
+)

@@ -1,0 +1,18 @@
+"""Qwen2-VL 2B backbone — M-RoPE, dynamic resolution (vision tower stubbed)
+[arXiv:2409.12191]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151_936,
+    qkv_bias=True,
+    mrope=True,
+    mrope_sections=(16, 24, 24),
+    num_patches=256,        # stub: precomputed SigLIP/ViT patch embeds per image
+)

@@ -1,0 +1,17 @@
+"""Whisper-small — enc-dec audio backbone, conv frontend stubbed [arXiv:2212.04356]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,          # decoder layers
+    encoder_layers=12,
+    encoder_seq=1500,       # mel frames after the (stubbed) conv frontend
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,        # MHA
+    d_ff=3072,
+    vocab_size=51_865,
+    is_encoder_decoder=True,
+    rope_theta=0.0,         # whisper uses learned absolute positions
+)

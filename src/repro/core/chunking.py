@@ -1,0 +1,150 @@
+"""Algorithm 1 — ChunkConstruction.
+
+Given a batch of variable-length sequences and a ChunkSize:
+  * sequences longer than ChunkSize are split into ceil(L/C) *dependent*
+    chunks (a dependent group, processed with the state-aware scheduler);
+  * the remaining short sequences are bin-packed into the fewest bins of
+    capacity ChunkSize (the paper's minimal-BinCnt loop), each bin becoming a
+    *standalone* packed chunk.
+
+Chunks are then materialised into fixed-shape arrays (tokens / labels /
+segment_ids / positions / loss_mask, all padded to ChunkSize) so every chunk
+hits the same jit signature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkItem:
+    seq_id: int
+    start: int          # token offset within the original sequence
+    length: int
+
+
+@dataclasses.dataclass
+class Chunk:
+    items: list         # list[ChunkItem]
+    chunk_size: int
+    group: Optional[int] = None      # seq_id for dependent chunks, else None
+    index_in_group: int = 0
+    group_size: int = 1
+
+    @property
+    def dependent(self) -> bool:
+        return self.group is not None
+
+    @property
+    def tokens_used(self) -> int:
+        return sum(it.length for it in self.items)
+
+
+def _first_fit_decreasing(lengths, ids, capacity, max_bins):
+    """Try to pack (id, length) into <= max_bins bins. Returns bins or None."""
+    order = sorted(range(len(lengths)), key=lambda i: -lengths[i])
+    bins, space = [], []
+    for i in order:
+        l = lengths[i]
+        placed = False
+        for b in range(len(bins)):
+            if space[b] >= l:
+                bins[b].append(ids[i])
+                space[b] -= l
+                placed = True
+                break
+        if not placed:
+            if len(bins) == max_bins:
+                return None
+            bins.append([ids[i]])
+            space.append(capacity - l)
+    return bins
+
+
+def construct_chunks(lengths: dict, chunk_size: int) -> list:
+    """lengths: {seq_id: length}. Returns list[Chunk] — dependent groups first
+    (ascending index), then packed standalone chunks (Fig. 4 layout)."""
+    assert chunk_size > 0
+    long_ids = [s for s, l in lengths.items() if l > chunk_size]
+    short_ids = [s for s, l in lengths.items() if 0 < l <= chunk_size]
+
+    chunks = []
+    for sid in sorted(long_ids):
+        l = lengths[sid]
+        n = -(-l // chunk_size)
+        for j in range(n):
+            start = j * chunk_size
+            chunks.append(Chunk(
+                items=[ChunkItem(sid, start, min(chunk_size, l - start))],
+                chunk_size=chunk_size, group=sid, index_in_group=j,
+                group_size=n))
+
+    if short_ids:
+        short_lens = [lengths[s] for s in short_ids]
+        lo = max(1, -(-sum(short_lens) // chunk_size))
+        bins = None
+        for bin_cnt in range(lo, len(short_ids) + 1):   # Alg. 1 lines 8-10
+            bins = _first_fit_decreasing(short_lens, short_ids, chunk_size,
+                                         bin_cnt)
+            if bins is not None:
+                break
+        assert bins is not None
+        for b in bins:
+            chunks.append(Chunk(
+                items=[ChunkItem(s, 0, lengths[s]) for s in b],
+                chunk_size=chunk_size))
+    return chunks
+
+
+def group_chunks(chunks):
+    """-> (dependent_groups: dict[group_id, list[Chunk] ordered],
+           standalone: list[Chunk])."""
+    groups, standalone = {}, []
+    for c in chunks:
+        if c.dependent:
+            groups.setdefault(c.group, []).append(c)
+        else:
+            standalone.append(c)
+    for g in groups.values():
+        g.sort(key=lambda c: c.index_in_group)
+    return groups, standalone
+
+
+def materialize_chunk(chunk: Chunk, sequences: dict, pad_id: int = 0):
+    """sequences: {seq_id: np.ndarray int32 tokens}. Returns a dict of
+    (1, chunk_size) arrays: tokens, labels, segment_ids, positions, loss_mask.
+
+    Labels are next-token within the ORIGINAL sequence, so a dependent chunk's
+    last token is supervised by the first token of the next chunk (no
+    boundary-token loss is lost by splitting).
+    """
+    C = chunk.chunk_size
+    tokens = np.full((C,), pad_id, np.int32)
+    labels = np.full((C,), pad_id, np.int32)
+    seg = np.zeros((C,), np.int32)
+    pos = np.zeros((C,), np.int32)
+    mask = np.zeros((C,), np.float32)
+
+    off = 0
+    for local_id, it in enumerate(chunk.items, start=1):
+        s = np.asarray(sequences[it.seq_id])
+        sl = s[it.start: it.start + it.length]
+        tokens[off: off + it.length] = sl
+        lab = s[it.start + 1: it.start + it.length + 1]
+        labels[off: off + len(lab)] = lab
+        m = np.ones((it.length,), np.float32)
+        if len(lab) < it.length:        # sequence ends inside this chunk
+            m[-1] = 0.0
+        mask[off: off + it.length] = m
+        seg[off: off + it.length] = (1 if chunk.dependent else local_id)
+        pos[off: off + it.length] = np.arange(it.start, it.start + it.length)
+        off += it.length
+
+    return {
+        "tokens": tokens[None], "labels": labels[None],
+        "segment_ids": seg[None], "positions": pos[None],
+        "loss_mask": mask[None],
+    }

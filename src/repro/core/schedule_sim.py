@@ -1,0 +1,169 @@
+"""Analytic pipeline-schedule simulator (paper Figs. 2, 6, 7).
+
+Models 1F1B pipeline execution with variable-duration microbatches under the
+paper's assumptions: backward = 2x forward; execution time proportional to
+sequence length. The *state-aware* variant adds ChunkFlow semantics:
+dependent-group backwards run in reverse chunk order, and the first N-K
+chunks of each group pay a recompute forward immediately before their
+backward (Algorithm 2 at pipeline scale).
+
+Timing uses a static per-stage op order (the 1F1B interleave) + dependency-
+respecting earliest-start scheduling, which is exactly how Megatron executes.
+
+Bubble accounting: bubble ratio = total idle time / (stages * makespan).
+Recompute time is counted as *bubble* (it is not useful work), matching the
+paper's Fig. 6 numbers — see tests/test_schedule_sim.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Microbatch:
+    fwd: float
+    group: Optional[int] = None    # dependent-group id
+    index_in_group: int = 0
+    group_size: int = 1
+    recompute: bool = False        # pays an extra fwd before backward
+
+    @property
+    def bwd(self) -> float:
+        return 2.0 * self.fwd
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    useful_time: float             # summed F+B across stages
+    recompute_time: float
+    bubble_ratio: float
+    per_stage_timeline: list       # [(stage, op, mb, start, end)]
+
+
+def _backward_order(mbs):
+    """FIFO, but each dependent group's backwards reversed (state-aware)."""
+    order = []
+    emitted = set()
+    for j, mb in enumerate(mbs):
+        if j in emitted:
+            continue
+        if mb.group is None:
+            order.append(j)
+            emitted.add(j)
+        else:
+            members = [i for i, m in enumerate(mbs) if m.group == mb.group]
+            members.sort(key=lambda i: mbs[i].index_in_group, reverse=True)
+            order.extend(members)
+            emitted.update(members)
+    return order
+
+
+def simulate_1f1b(mbs, n_stages: int, *, state_aware: bool = False):
+    """Discrete-event 1F1B simulation. mbs: list[Microbatch] in arrival order.
+
+    Per-stage dispatch policy (Megatron 1F1B): keep at most ``P - s``
+    microbatches in flight; prefer backwards once at the limit. Backwards are
+    emitted strictly in ``b_order`` (FIFO, or group-reversed when
+    state_aware) — head-of-line blocking models the KV-gradient dependency.
+    """
+    M, P = len(mbs), n_stages
+    b_order = _backward_order(mbs) if state_aware else list(range(M))
+
+    f_end = [[None] * M for _ in range(P)]
+    b_end = [[None] * M for _ in range(P)]
+    f_next = [0] * P                  # next forward index to emit per stage
+    b_next = [0] * P                  # pointer into b_order per stage
+    stage_free = [0.0] * P
+    timeline = []
+    recompute_time = 0.0
+    done = 0
+
+    def ready_f(s, t):
+        j = f_next[s]
+        if j >= M:
+            return None
+        dep = 0.0 if s == 0 else f_end[s - 1][j]
+        if dep is None or dep > t + 1e-12:
+            return None
+        return j
+
+    def ready_b(s, t):
+        if b_next[s] >= M:
+            return None
+        j = b_order[b_next[s]]
+        if f_end[s][j] is None or f_end[s][j] > t + 1e-12:
+            return None
+        dep = f_end[s][j] if s == P - 1 else b_end[s + 1][j]
+        if dep is None or dep > t + 1e-12:
+            return None
+        return j
+
+    # event times to (re)try dispatching
+    times = {0.0}
+    while done < 2 * M * P:
+        t = min(times)
+        times.discard(t)
+        progressed = False
+        for s in range(P):
+            while stage_free[s] <= t + 1e-12:
+                in_flight = f_next[s] - b_next[s]
+                limit = min(M, P - s)
+                fj, bj = ready_f(s, t), ready_b(s, t)
+                if bj is not None and (in_flight >= limit or fj is None):
+                    kind, j = "B", bj
+                elif fj is not None:
+                    kind, j = "F", fj
+                elif bj is not None:
+                    kind, j = "B", bj
+                else:
+                    break
+                mb = mbs[j]
+                start = max(stage_free[s], t)
+                if kind == "F":
+                    end = start + mb.fwd
+                    f_end[s][j] = end
+                    f_next[s] += 1
+                else:
+                    extra = mb.fwd if (state_aware and mb.recompute) else 0.0
+                    end = start + extra + mb.bwd
+                    recompute_time += extra
+                    b_end[s][j] = end
+                    b_next[s] += 1
+                timeline.append((s, kind, j, start, end))
+                stage_free[s] = end
+                times.add(end)
+                done += 1
+                progressed = True
+        if not times and done < 2 * M * P:
+            raise RuntimeError("deadlocked schedule")
+
+    makespan = max(stage_free)
+    useful = sum(mb.fwd + mb.bwd for mb in mbs) * P
+    bubble = P * makespan - useful            # recompute counted as bubble
+    return SimResult(
+        makespan=makespan,
+        useful_time=useful,
+        recompute_time=recompute_time,
+        bubble_ratio=bubble / (P * makespan),
+        per_stage_timeline=timeline,
+    )
+
+
+# --------------------------------------------------- ChunkFlow front-end ----
+def chunks_to_microbatches(chunks, unit: float = 1.0, k: int = 1):
+    """Map core.chunking.Chunk objects to simulator microbatches; mark the
+    first N-K chunks of each dependent group for recompute (Alg. 2)."""
+    mbs = []
+    for c in chunks:
+        rec = (c.dependent and c.index_in_group < max(c.group_size - k, 0))
+        mbs.append(Microbatch(
+            fwd=unit * c.tokens_used, group=c.group,
+            index_in_group=c.index_in_group, group_size=c.group_size,
+            recompute=rec))
+    return mbs
+
+
+def sequences_to_microbatches(lengths, unit: float = 1.0):
+    return [Microbatch(fwd=unit * l) for l in lengths]

@@ -1,0 +1,149 @@
+"""StateStore — the per-family chunk-state plumbing for Algorithm 2.
+
+A *prefix* is the float-only state a chunk consumes from earlier chunks of its
+group (K/V tensors, SSD states, whisper encoder output). Integer position /
+segment arrays ride in the chunk batch instead, so `jax.vjp` only ever sees
+differentiable state.
+
+Operations:
+  empty_prefix(cfg, B)                      zero-length prefix
+  assemble(cfg, prefix, batch)              -> api.forward state (adds pos/seg)
+  slice_own(cfg, new_state, P)              -> this chunk's own contribution
+  extend(cfg, prefix, own)                  -> prefix for the next chunk
+  split_prefix_cot(cfg, cot, i, C)          -> {j: own-shaped cotangent}
+      routes the KV gradients (paper §4.2 backward dependency) back to the
+      chunks that produced each state slice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+def _attn_like(cfg: ModelConfig) -> bool:
+    return cfg.family in ("dense", "moe", "vlm")
+
+
+def empty_prefix(cfg: ModelConfig, batch: int, dtype=None):
+    st = api.empty_state(cfg, batch, dtype)
+    if _attn_like(cfg):
+        return {"k": st["k"], "v": st["v"]}
+    if cfg.family == "ssm":
+        return st
+    if cfg.family == "hybrid":
+        return {"attn": {"k": st["attn"]["k"], "v": st["attn"]["v"]},
+                "mamba": st["mamba"]}
+    if cfg.family == "audio":
+        return {"k": st["k"], "v": st["v"], "enc_out": None}
+    raise ValueError(cfg.family)
+
+
+def prefix_len(cfg: ModelConfig, prefix) -> int:
+    if cfg.family == "ssm":
+        return 0   # recurrent state has no length
+    if cfg.family == "hybrid":
+        return prefix["attn"]["k"].shape[2]
+    return prefix["k"].shape[2]
+
+
+def assemble(cfg: ModelConfig, prefix, batch):
+    """Build the api.forward state from a float prefix + int pos/seg arrays."""
+    p_pos = batch.get("prefix_pos")
+    p_seg = batch.get("prefix_seg")
+    if _attn_like(cfg) or cfg.family == "audio":
+        st = {"k": prefix["k"], "v": prefix["v"], "pos": p_pos, "seg": p_seg}
+        if cfg.family == "audio":
+            st["enc_out"] = prefix.get("enc_out")
+        return st
+    if cfg.family == "ssm":
+        return prefix
+    if cfg.family == "hybrid":
+        return {"attn": {"k": prefix["attn"]["k"], "v": prefix["attn"]["v"],
+                         "pos": p_pos, "seg": p_seg},
+                "mamba": prefix["mamba"]}
+    raise ValueError(cfg.family)
+
+
+def slice_own(cfg: ModelConfig, new_state, P: int):
+    """Slice this chunk's own contribution out of forward()'s concatenated
+    state. Returning only the slice keeps the vjp cotangent routing correct:
+    prefix gradients flow through the attention *reads*, not the concat."""
+    if _attn_like(cfg):
+        return {"k": new_state["k"][:, :, P:], "v": new_state["v"][:, :, P:]}
+    if cfg.family == "ssm":
+        return new_state
+    if cfg.family == "hybrid":
+        return {"attn": {"k": new_state["attn"]["k"][:, :, P:],
+                         "v": new_state["attn"]["v"][:, :, P:]},
+                "mamba": new_state["mamba"]}
+    if cfg.family == "audio":
+        return {"k": new_state["k"][:, :, P:], "v": new_state["v"][:, :, P:],
+                "enc_out": new_state["enc_out"]}
+    raise ValueError(cfg.family)
+
+
+def extend(cfg: ModelConfig, prefix, own):
+    cat = lambda a, b: jnp.concatenate([a, b], axis=2)
+    if _attn_like(cfg):
+        return {"k": cat(prefix["k"], own["k"]), "v": cat(prefix["v"], own["v"])}
+    if cfg.family == "ssm":
+        return own
+    if cfg.family == "hybrid":
+        return {"attn": {"k": cat(prefix["attn"]["k"], own["attn"]["k"]),
+                         "v": cat(prefix["attn"]["v"], own["attn"]["v"])},
+                "mamba": own["mamba"]}
+    if cfg.family == "audio":
+        return {"k": cat(prefix["k"], own["k"]), "v": cat(prefix["v"], own["v"]),
+                "enc_out": own["enc_out"]}
+    raise ValueError(cfg.family)
+
+
+def _zeros_like(t):
+    return jax.tree.map(jnp.zeros_like, t)
+
+
+def split_prefix_cot(cfg: ModelConfig, cot, i: int, chunk_size: int):
+    """cot = gradient w.r.t. chunk i's *prefix input* (length i*C for K/V;
+    the previous chunk's output for recurrent leaves). Returns
+    {j: own-shaped cotangent contribution} for j < i."""
+    if i == 0:
+        return {}
+    out = {}
+
+    def kv_slice(kv, j):
+        s = slice(j * chunk_size, (j + 1) * chunk_size)
+        return {"k": kv["k"][:, :, s], "v": kv["v"][:, :, s]}
+
+    for j in range(i):
+        if _attn_like(cfg):
+            out[j] = kv_slice(cot, j)
+        elif cfg.family == "ssm":
+            if j == i - 1:
+                out[j] = cot
+        elif cfg.family == "hybrid":
+            c = {"attn": kv_slice(cot["attn"], j),
+                 "mamba": (cot["mamba"] if j == i - 1
+                           else _zeros_like(cot["mamba"]))}
+            out[j] = c
+        elif cfg.family == "audio":
+            c = kv_slice(cot, j)
+            if cot.get("enc_out") is not None:
+                c["enc_out"] = (cot["enc_out"] if j == i - 1
+                                else jnp.zeros_like(cot["enc_out"]))
+            else:
+                c["enc_out"] = None
+            out[j] = c
+    return out
+
+
+def tree_add(a, b):
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return jax.tree.map(
+        lambda x, y: x + y if (x is not None and y is not None) else (x or y),
+        a, b, is_leaf=lambda x: x is None)

@@ -1,0 +1,63 @@
+"""ChunkSize / K grid search (paper §5).
+
+"For a given training configuration, we leverage a grid search method for
+ChunkSize and K and select the best combination for optimal performance."
+
+Without pipeline parallelism the paper's rule is closed-form: K=1 and the
+largest ChunkSize that fits memory. With PP, the schedule simulator scores
+each candidate on batches sampled from the actual length distribution
+(more chunks = fewer bubbles, bigger chunks = better per-token efficiency),
+subject to the K*ChunkSize activation-memory budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.chunking import construct_chunks
+from repro.core.schedule_sim import chunks_to_microbatches, simulate_1f1b
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    chunk_size: int
+    k: int
+    score: float                 # mean simulated makespan (lower = better)
+    table: dict                  # (chunk_size, k) -> score
+
+
+def seq_time(tokens, overhead=2000.0):
+    """Per-micro-step cost: linear + under-saturation overhead. (No
+    quadratic attention term here: a long sequence's total attention cost is
+    chunk-size-invariant — intra-chunk quadratic + prefix reads sum to the
+    same triangle — so it cancels out of the ChunkSize comparison.)"""
+    return tokens + overhead
+
+
+def grid_search(batches, *, pp: int, memory_token_budget: int,
+                chunk_sizes=(2048, 4096, 8192, 16384, 32768),
+                ks=(1, 2, 4, 8, 16)):
+    """batches: list of {seq_id: length} dicts sampled from the real data
+    distribution. memory_token_budget: max K*ChunkSize live activation
+    tokens. Returns TuneResult; K is forced to 1 when pp == 1 (paper §5)."""
+    if pp == 1:
+        ks = (1,)
+    table = {}
+    for cs in chunk_sizes:
+        for k in ks:
+            if k * cs > memory_token_budget:
+                continue
+            total = 0.0
+            for lengths in batches:
+                chunks = construct_chunks(lengths, cs)
+                mbs = chunks_to_microbatches(chunks, k=k)
+                mbs = [dataclasses.replace(m, fwd=seq_time(m.fwd))
+                       for m in mbs]
+                if pp == 1:
+                    total += sum(3.0 * m.fwd + (m.fwd if m.recompute else 0.0)
+                                 for m in mbs)
+                else:
+                    total += simulate_1f1b(mbs, pp, state_aware=True).makespan
+            table[(cs, k)] = total / len(batches)
+    best = min(table, key=table.get)
+    return TuneResult(chunk_size=best[0], k=best[1], score=table[best],
+                      table=table)

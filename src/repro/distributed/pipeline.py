@@ -1,0 +1,170 @@
+"""SPMD pipeline-parallel executor for chunk streams (paper §4.3, adapted).
+
+TPU/JAX adaptation (DESIGN.md §2): Megatron's 1F1B is an imperative per-rank
+schedule; in JAX the idiomatic equivalent is an SPMD rotation pipeline —
+``shard_map`` over a ``pipe`` mesh axis, stage weights sharded on their
+leading dim, activations handed to the next stage with
+``lax.collective_permute`` each tick, ``M + S - 1`` ticks total. Backward is
+obtained by differentiating through the rotation (collective_permute
+transposes to the reverse permutation), which XLA schedules 1F1B-style per
+stage. The *state-aware* part is preserved exactly: each stage keeps a
+resident K/V buffer for the dependent group being streamed, so chunk ``j``
+attends to the K/V of chunks ``< j`` computed on that same stage — the
+paper's StateStore, pipelined.
+
+The schedule-level analysis (bubble ratios, recompute placement, K trade-off)
+lives in core/schedule_sim.py; this module is the executable counterpart and
+is validated for numerical equivalence in tests/test_pipeline_exec.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def split_stages(layer_params, n_stages: int):
+    """(L, ...) stacked layer params -> (S, L/S, ...)."""
+    def r(a):
+        Lc = a.shape[0]
+        assert Lc % n_stages == 0, (Lc, n_stages)
+        return a.reshape(n_stages, Lc // n_stages, *a.shape[1:])
+    return jax.tree.map(r, layer_params)
+
+
+def _stage_apply(cfg: ModelConfig, stage_layers, x, pos, seg,
+                 kbuf, vbuf, prefix_valid):
+    """Run this stage's layer slab over one chunk.
+
+    kbuf/vbuf: (Lp, B, maxP, Hkv, hd) resident K/V of earlier chunks;
+    prefix_valid: (maxP,) bool — which prefix slots are live for this chunk.
+    Returns (y, new_k (Lp,B,T,Hkv,hd), new_v).
+    """
+    B, T, _ = x.shape
+    maxP = kbuf.shape[2]
+    p_pos = jnp.broadcast_to(jnp.arange(maxP, dtype=jnp.int32), (B, maxP))
+    p_seg = jnp.broadcast_to(prefix_valid.astype(jnp.int32), (B, maxP))
+
+    def layer_fn(x, xs):
+        lp, pk, pv = xs
+        prefix = {"k": pk, "v": pv, "pos": p_pos, "seg": p_seg}
+        h, new_kv = L.attention_layer(
+            lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+            positions=pos, segment_ids=seg, prefix=prefix,
+            blockwise_threshold=1 << 30)
+        x = x + h
+        h2 = L.swiglu_mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return x + h2, new_kv
+
+    y, new_kv = jax.lax.scan(layer_fn, x, (stage_layers, kbuf, vbuf))
+    return y, new_kv["k"], new_kv["v"]
+
+
+def pipelined_chunk_forward(cfg: ModelConfig, stage_layers, x_mbs, pos_mbs,
+                            seg_mbs, dep_flags, chunk_size: int,
+                            axis: str = "pipe"):
+    """Inside shard_map: run M chunk microbatches through S stages.
+
+    x_mbs: (M, B, T, D) embedded chunks (replicated); dep_flags: (M,) int32 —
+    1 if the chunk belongs to THE dependent group of this stream (its K/V is
+    stored and later chunks of the group attend to it). Returns (M, B, T, D)
+    outputs (valid on every device after psum).
+    """
+    s = jax.lax.axis_index(axis)
+    S = jax.lax.psum(1, axis)
+    M, B, T, D = x_mbs.shape
+    maxP = chunk_size * M
+    Lp = jax.tree.leaves(stage_layers)[0].shape[0]
+    hd = cfg.resolved_head_dim
+
+    def varying(x):
+        return jax.lax.pcast(x, (axis,), to="varying")
+
+    kbuf0 = varying(jnp.zeros((Lp, B, maxP, cfg.num_kv_heads, hd), x_mbs.dtype))
+    vbuf0 = jnp.zeros_like(kbuf0)
+    outs0 = varying(jnp.zeros_like(x_mbs))
+    state0 = varying(jnp.zeros((B, T, D), x_mbs.dtype))
+    # how many dependent chunks precede each mb in the stream
+    dep_prefix_chunks = jnp.cumsum(dep_flags) - dep_flags      # (M,)
+
+    def tick(carry, t):
+        state, kbuf, vbuf, outs = carry
+        j = jnp.clip(t - s, 0, M - 1)
+        valid = (t - s >= 0) & (t - s < M)
+
+        x_in = jnp.where(s == 0, x_mbs[j], state)
+        pos, seg = pos_mbs[j], seg_mbs[j]
+        is_dep = dep_flags[j] > 0
+        plen = jnp.where(is_dep, dep_prefix_chunks[j] * chunk_size, 0)
+        prefix_valid = jnp.arange(maxP) < plen
+
+        y, nk, nv = _stage_apply(cfg, stage_layers, x_in, pos, seg,
+                                 kbuf, vbuf, prefix_valid)
+
+        # store this chunk's K/V into the resident group buffer
+        write = (valid & is_dep).astype(kbuf.dtype)
+        off = dep_prefix_chunks[j] * chunk_size
+        upd = jax.lax.dynamic_slice(kbuf, (0, 0, off, 0, 0),
+                                    (Lp, B, T, cfg.num_kv_heads, hd))
+        kbuf = jax.lax.dynamic_update_slice(
+            kbuf, upd * (1 - write) + nk * write, (0, 0, off, 0, 0))
+        upd = jax.lax.dynamic_slice(vbuf, (0, 0, off, 0, 0),
+                                    (Lp, B, T, cfg.num_kv_heads, hd))
+        vbuf = jax.lax.dynamic_update_slice(
+            vbuf, upd * (1 - write) + nv * write, (0, 0, off, 0, 0))
+
+        # last stage records its output for mb j
+        is_last = (s == S - 1)
+        rec = (valid & is_last).astype(outs.dtype)
+        cur = jax.lax.dynamic_slice(outs, (j, 0, 0, 0), (1, B, T, D))
+        outs = jax.lax.dynamic_update_slice(
+            outs, cur * (1 - rec) + y[None] * rec, (j, 0, 0, 0))
+
+        # rotate activations to the next stage
+        perm = [(i, (i + 1) % S) for i in range(S)]
+        state = jax.lax.ppermute(y, axis, perm)
+        return (state, kbuf, vbuf, outs), None
+
+    (_, _, _, outs), _ = jax.lax.scan(
+        tick, (state0, kbuf0, vbuf0, outs0),
+        jnp.arange(M + S - 1))
+    return jax.lax.psum(outs * (s == S - 1), axis)
+
+
+def make_pipeline_step(cfg: ModelConfig, mesh, n_stages: int,
+                       chunk_size: int, axis: str = "pipe"):
+    """Build a jitted pipeline-parallel loss/grad step.
+
+    params: api.init_params output for a dense cfg with layers divisible by
+    n_stages. Batch: dict of (M, B, T) arrays + dep_flags (M,).
+    """
+    from repro.core.chunked_step import token_nll_sum
+
+    def body(sl, x, pos, seg, dep):
+        return pipelined_chunk_forward(cfg, sl, x, pos, seg, dep,
+                                       chunk_size, axis)
+
+    def loss_fn(params, batch):
+        stage_layers = split_stages(params["layers"], n_stages)
+        x_mbs = params["embed"][batch["tokens"]]
+        outs = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis), P(), P(), P(), P()),
+            out_specs=P(),
+        )(stage_layers, x_mbs, batch["positions"], batch["segment_ids"],
+          batch["dep_flags"])
+        x = L.rms_norm(outs, params["ln_f"], cfg.norm_eps)
+        logits = (x @ params["unembed"]).astype(jnp.float32)
+        M = logits.shape[0]
+        loss = token_nll_sum(
+            logits.reshape(M * logits.shape[1], *logits.shape[2:]),
+            batch["labels"].reshape(-1, batch["labels"].shape[-1]),
+            batch["loss_mask"].reshape(-1, batch["loss_mask"].shape[-1]))
+        return loss * batch["loss_scale"]
+
+    return jax.jit(jax.value_and_grad(loss_fn))

@@ -1,0 +1,215 @@
+"""Per-architecture GSPMD sharding rules (divisibility-aware).
+
+Megatron-style mapping onto the ("pod","data","model") mesh:
+  * TP over "model": attention q-proj out dim, kv-proj out dim (when the KV
+    width divides — GQA KV otherwise replicates within TP groups, standard
+    practice), FFN hidden dim, expert dim of MoE weights (expert parallelism),
+    vocab dim of the unembedding, mamba inner dim.
+  * DP over "data" (x "pod" multi-pod): batch dim of every activation.
+  * FSDP ("zero-3") over "data" for tensors still larger than
+    ``fsdp_threshold`` bytes per model shard — required for the ≥398B archs.
+  * SP (sequence sharding) is applied for long-context shapes by sharding the
+    sequence dim of decode caches over "model" when KV heads cannot split.
+
+All functions return pytrees of PartitionSpec matching the corresponding
+param/cache/batch pytrees.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+FSDP_THRESHOLD = 64 * 1024 * 1024       # bytes per model-shard
+
+
+def _div(n, by):
+    return by > 0 and n % by == 0
+
+
+def mesh_sizes(mesh):
+    d = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return d.get("pod", 1), d.get("data", 1), d.get("model", 1)
+
+
+def dp_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _maybe_fsdp(spec_list, shape, mesh, dtype_bytes=2, *,
+                threshold=FSDP_THRESHOLD):
+    """Add 'data' sharding on the largest still-unsharded divisible dim if the
+    per-model-shard tensor is large (ZeRO-3)."""
+    _, dsz, msz = mesh_sizes(mesh)
+    per_shard = np.prod(shape) * dtype_bytes
+    for sp in spec_list:
+        if sp == "model":
+            per_shard //= msz
+    if per_shard <= threshold:
+        return spec_list
+    # largest unsharded divisible dim
+    cands = [(shape[i], i) for i, sp in enumerate(spec_list)
+             if sp is None and _div(shape[i], dsz)]
+    if not cands:
+        return spec_list
+    _, idx = max(cands)
+    spec_list = list(spec_list)
+    spec_list[idx] = "data"
+    return spec_list
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh, *,
+                fsdp_threshold: int = FSDP_THRESHOLD):
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape).
+
+    fsdp_threshold: per-model-shard bytes above which a tensor additionally
+    shards over the data axis (ZeRO-3). Training needs it whenever
+    params+optimizer exceed HBM; inference passes a much higher threshold —
+    re-gathering weights per layer is pure collective waste when the bf16
+    weights already fit (measured on yi-34b prefill: §Perf iteration 2)."""
+    _, dsz, msz = mesh_sizes(mesh)
+    hd = cfg.resolved_head_dim
+
+    def leaf(path, x):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = names[-1]
+        shape = x.shape
+        spec = [None] * len(shape)
+
+        def set_if(axis_idx, mesh_axis, size):
+            if _div(shape[axis_idx], size):
+                spec[axis_idx] = mesh_axis
+
+        if name == "embed":
+            set_if(1, "model", msz)                    # d_model-sharded table
+        elif name == "unembed":
+            set_if(len(shape) - 1, "model", msz)       # vocab-parallel logits
+        elif name in ("wq", "wo"):
+            # (L?, D, Hq*hd) / (L?, Hq*hd, D): shard along WHOLE heads only —
+            # splitting inside head_dim makes every attention contraction
+            # partial (measured: 57 TB of per-block score all-reduces on yi)
+            if cfg.padded_num_heads % msz == 0:
+                axis = len(shape) - 1 if name == "wq" else len(shape) - 2
+                set_if(axis, "model", msz)
+        elif name in ("wk", "wv"):
+            if cfg.padded_num_kv_heads % msz == 0:
+                set_if(len(shape) - 1, "model", msz)
+        elif name == "bq":
+            if cfg.padded_num_heads % msz == 0:
+                set_if(len(shape) - 1, "model", msz)
+        elif name in ("bk", "bv"):
+            if cfg.padded_num_kv_heads % msz == 0:
+                set_if(len(shape) - 1, "model", msz)
+        elif name in ("w_gate", "w_up", "w_in"):
+            if cfg.num_experts and len(shape) >= 3 and "moe" in str(names):
+                # (L?, E, D, F): expert parallelism on E
+                set_if(len(shape) - 3, "model", msz)
+            else:
+                set_if(len(shape) - 1, "model", msz)   # FFN hidden dim
+        elif name in ("w_down", "w_out"):
+            if cfg.num_experts and len(shape) >= 3 and "moe" in str(names):
+                set_if(len(shape) - 3, "model", msz)
+            else:
+                set_if(len(shape) - 2, "model", msz)
+        elif name == "b_in":
+            set_if(len(shape) - 1, "model", msz)
+        elif name == "in_proj":
+            set_if(len(shape) - 1, "model", msz)       # mamba fused proj
+        elif name == "out_proj":
+            set_if(len(shape) - 2, "model", msz)       # (L?, DI, D)
+        elif name == "router":
+            pass                                        # small, replicated
+        # norms / conv / A_log / dt_bias / D / pos tables: replicated
+
+        spec = _maybe_fsdp(spec, shape, mesh,
+                           jnp.dtype(x.dtype).itemsize,
+                           threshold=fsdp_threshold)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def _pad_spec(spec: P, ndim: int) -> P:
+    s = (list(spec) + [None] * ndim)[:ndim]
+    return P(*s)
+
+
+def adamw_opt_specs(pspecs):
+    """m/v are param-shaped fp32 -> inherit param sharding exactly."""
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def adafactor_opt_specs(pspecs, params_shape):
+    """Factored slots: vr drops the last dim, vc drops the second-last."""
+    def slot(spec, x):
+        if len(x.shape) >= 2:
+            return {"vr": P(*list(_pad_spec(spec, len(x.shape)))[:-1]),
+                    "vc": P(*(list(_pad_spec(spec, len(x.shape)))[:-2]
+                              + list(_pad_spec(spec, len(x.shape)))[-1:]))}
+        return {"v": _pad_spec(spec, len(x.shape))}
+
+    return {"slots": jax.tree.map(slot, pspecs, params_shape,
+                                  is_leaf=lambda s: isinstance(s, P)),
+            "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, batch_shape, mesh):
+    dp = dp_axes(mesh)
+
+    def leaf(path, x):
+        name = getattr(path[-1], "key", None)
+        if name in ("loss_scale",):
+            return P()
+        if x.ndim == 0:
+            return P()
+        bsz = x.shape[0]
+        total_dp = int(np.prod([dict(zip(mesh.axis_names,
+                                         mesh.devices.shape))[a] for a in dp]))
+        first = dp if _div(bsz, total_dp) else None
+        return P(first, *([None] * (x.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh, batch: int):
+    """Decode caches: batch over DP when divisible; KV heads over model when
+    divisible, else the sequence dim over model (sequence-parallel cache)."""
+    dp = dp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total_dp = int(np.prod([sizes[a] for a in dp]))
+    msz = sizes["model"]
+    b_ax = dp if _div(batch, total_dp) else None
+
+    def leaf(path, x):
+        name = getattr(path[-1], "key", None)
+        shape = x.shape
+        if name in ("k", "v", "ck", "cv", "k_local", "v_local",
+                    "k_global", "v_global"):
+            # (L, B, S, Hkv, hd)
+            spec = [None, b_ax, None, None, None]
+            if _div(shape[3], msz):
+                spec[3] = "model"
+            elif _div(shape[2], msz):
+                spec[2] = "model"
+            if b_ax is None and spec[2] is None and _div(shape[2], total_dp):
+                spec[2] = dp if spec[3] == "model" else dp
+            return P(*spec)
+        if name == "ssm":
+            # (..., B, H, P, S)
+            spec = [None] * len(shape)
+            spec[-4] = b_ax
+            if _div(shape[-3], msz):
+                spec[-3] = "model"
+            return P(*spec)
+        if name == "conv":
+            spec = [None] * len(shape)
+            spec[-3] = b_ax
+            if _div(shape[-1], msz):
+                spec[-1] = "model"
+            return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)

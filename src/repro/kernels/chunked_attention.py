@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: chunked prefix-KV flash attention.
+
+This is ChunkFlow's compute hot-spot: a query chunk of T tokens attends to
+(prefix KV of earlier chunks) ++ (its own KV, causally). One fused kernel
+handles both the standalone-packed case (segment-masked, prefix len 0) and
+the dependent-chunk case (prefix + causal), so the chunk scheduler never pays
+two attention launches.
+
+TPU mapping (DESIGN.md §2): grid (B, Hq, nQ, nK) with the kv axis innermost
+and sequential ("arbitrary") so the online-softmax running max / denominator
+/ accumulator live in VMEM scratch across kv steps; q/k/v blocks are
+BlockSpec-tiled into VMEM with MXU-aligned (128-multiple) block shapes; the
+two matmuls hit the MXU at f32 accumulation regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(qpos_ref, kpos_ref, qseg_ref, kseg_ref,
+                  q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr,
+                  *, scale, window, softcap, n_k):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qp = qpos_ref[0][:, None]                      # (bq, 1)
+    kp = kpos_ref[0][None, :]                      # (1, bk)
+    qs = qseg_ref[0][:, None]
+    ks = kseg_ref[0][None, :]
+    mask = (qs == ks) & (qs > 0) & (ks > 0) & (qp >= kp)
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def chunked_prefix_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
+                             window: int = 0, softcap: float = 0.0,
+                             block_q: int = 128, block_k: int = 128,
+                             interpret: bool = False):
+    """q: (B, Hq, T, D); k/v: (B, Hkv, S, D) where S = prefix_len + T.
+    q_pos/q_seg: (B, T); k_pos/k_seg: (B, S). Returns (B, Hq, T, D).
+
+    Callers must pad T to block_q and S to block_k (pad slots get seg=0).
+    """
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    assert T % block_q == 0 and S % block_k == 0, (T, S, block_q, block_k)
+    G = Hq // Hkv
+    n_q, n_k = T // block_q, S // block_k
+    grid = (B, Hq, n_q, n_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (D ** 0.5), window=window,
+        softcap=softcap, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),
+            pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q_pos, k_pos, q_seg, k_seg, q, k, v)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: flash-decode attention against a KV cache.
+
+One new token per request attends to ``cache_len`` cached K/V slots. Grid
+(B, Hq, nK) with the cache axis sequential; the running softmax state lives
+in VMEM scratch. ``cache_len`` arrives via scalar prefetch (SMEM) so the slot
+validity mask is computed on-core without materialising (B, S) masks in HBM.
+Optional ``window`` masks sliding-window layers (gemma2 local) — the memory
+saving for 500K decode comes from combining this with a ring cache upstream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale, window, softcap,
+                   block_k, n_k):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cache_len = len_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)            # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    slot = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = slot <= cache_len
+    if window:
+        mask &= (cache_len - slot) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, cache_len, *, window: int = 0,
+                     softcap: float = 0.0, block_k: int = 128,
+                     interpret: bool = False):
+    """q: (B, Hq, 1, D); k/v: (B, Hkv, S, D); cache_len: scalar int32 (the
+    new token's slot — slots <= cache_len are attended). Returns q-shaped."""
+    B, Hq, _, D = q.shape
+    _, Hkv, S, _ = k.shape
+    assert S % block_k == 0
+    G = Hq // Hkv
+    n_k = S // block_k
+    grid = (B, Hq, n_k)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / (D ** 0.5), window=window,
+        softcap=softcap, block_k=block_k, n_k=n_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ik, len_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, ik, len_ref: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, ik, len_ref: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D),
+                               lambda b, h, ik, len_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, D), q.dtype),
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(cache_len, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,60 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These own the (B,T,H,D) <-> (B,H,T,D) layout transposes and the block
+padding, so model code can call them with the layouts layers.py uses.
+``interpret=True`` executes the kernel body in Python on CPU (how this repo
+validates TPU kernels without TPU hardware); on a real TPU deployment the
+wrappers are called with interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunked_attention import chunked_prefix_attention
+from repro.kernels.decode_attention import decode_attention
+
+
+def _pad_to(x, axis, mult, value=0):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_q",
+                                             "block_k", "interpret"))
+def chunk_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *, window=0,
+                    softcap=0.0, block_q=128, block_k=128, interpret=True):
+    """q: (B, T, Hq, D); k/v: (B, S, Hkv, D) (prefix ++ self, already
+    rope-rotated); returns (B, T, Hq, D)."""
+    B, T, Hq, D = q.shape
+    qt = _pad_to(q.transpose(0, 2, 1, 3), 2, block_q)
+    kt = _pad_to(k.transpose(0, 2, 1, 3), 2, block_k)
+    vt = _pad_to(v.transpose(0, 2, 1, 3), 2, block_k)
+    o = chunked_prefix_attention(
+        qt, kt, vt,
+        _pad_to(q_pos, 1, block_q), _pad_to(k_pos, 1, block_k),
+        _pad_to(q_seg, 1, block_q), _pad_to(k_seg, 1, block_k),
+        window=window, softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return o[:, :, :T].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_k",
+                                             "interpret"))
+def cached_decode_attention(q, k, v, cache_len, *, window=0, softcap=0.0,
+                            block_k=128, interpret=True):
+    """q: (B, 1, Hq, D); k/v cache: (B, S, Hkv, D); cache_len: scalar."""
+    B, _, Hq, D = q.shape
+    qt = q.transpose(0, 2, 1, 3)
+    kt = _pad_to(k.transpose(0, 2, 1, 3), 2, block_k)
+    vt = _pad_to(v.transpose(0, 2, 1, 3), 2, block_k)
+    o = decode_attention(qt, kt, vt, cache_len, window=window,
+                         softcap=softcap, block_k=block_k,
+                         interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

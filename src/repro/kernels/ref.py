@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_prefix_attention_ref(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
+                                 window: int = 0, softcap: float = 0.0):
+    """Same contract as kernels.chunked_attention.chunked_prefix_attention.
+    q: (B,Hq,T,D), k/v: (B,Hkv,S,D)."""
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, T, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgtd,bhsd->bhgts", qf, kf) / (D ** 0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = ((q_seg[:, :, None] == k_seg[:, None, :])
+            & (q_seg[:, :, None] > 0) & (k_seg[:, None, :] > 0)
+            & (q_pos[:, :, None] >= k_pos[:, None, :]))
+    if window:
+        mask &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (padding queries) -> zero output like the kernel
+    any_valid = mask.any(axis=-1)[:, None, None, :, None]
+    o = jnp.einsum("bhgts,bhsd->bhgtd", p, vf) * any_valid
+    return o.reshape(B, Hq, T, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, cache_len, *, window: int = 0,
+                         softcap: float = 0.0):
+    """q: (B,Hq,1,D); k/v: (B,Hkv,S,D)."""
+    B, Hq, _, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, 1, D)
+    s = jnp.einsum("bhgtd,bhsd->bhgts", qf, k.astype(jnp.float32)) / (D ** 0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    slot = jnp.arange(S)
+    mask = slot <= cache_len
+    if window:
+        mask &= (cache_len - slot) < window
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgts,bhsd->bhgtd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def ssd_intra_chunk_ref(Cc, Bc, dA_cum, dt, xc):
+    """Oracle for kernels.ssd_scan.ssd_intra_chunk (pairwise-einsum form,
+    identical math to models/mamba2._ssd_chunk_scan's y_intra)."""
+    l = Cc.shape[2]
+    cb = jnp.einsum("bcis,bcjs->bcij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    seg = (dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]).astype(
+        jnp.float32)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    w = cb[..., None] * L * dt[:, :, None, :, :].astype(jnp.float32)
+    y = jnp.einsum("bcijh,bcjhp->bcihp", w, xc.astype(jnp.float32))
+    return y.astype(xc.dtype)

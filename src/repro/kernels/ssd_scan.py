@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: SSD intra-chunk quadratic pass (Mamba-2 hot spot).
+
+Within one SSD chunk of length l the output is an attention-like product
+(Mamba-2 Alg. 1):
+
+    y[i] = sum_{j<=i} (C_i . B_j) * exp(dA_cum[i] - dA_cum[j]) * dt[j] * x[j]
+
+Grid (B, n_chunks, H): each cell loads the chunk's C/B projections and one
+head's decay/value lanes into VMEM, forms the (l, l) causal decay-weighted
+score tile on the MXU, and contracts against the values. l=128..256 keeps
+the tile comfortably in VMEM and MXU-aligned. The inter-chunk state
+recurrence stays in the lax.scan of models/mamba2.py (it is tiny and
+sequential); this kernel covers the quadratic FLOPs that dominate training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(c_ref, b_ref, da_ref, dt_ref, x_ref, o_ref, *, l):
+    c = c_ref[0, 0].astype(jnp.float32)            # (l, S)
+    b = b_ref[0, 0].astype(jnp.float32)            # (l, S)
+    da = da_ref[0, 0, :, 0].astype(jnp.float32)    # (l,)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)    # (l,)
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)   # (l, P)
+
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (l, l)
+    seg = da[:, None] - da[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    decay = jnp.where(row >= col, jnp.exp(seg), 0.0)
+    w = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (l, P)
+    o_ref[0, 0, :, 0, :] = y.astype(o_ref.dtype)
+
+
+def ssd_intra_chunk(Cc, Bc, dA_cum, dt, xc, *, interpret: bool = False):
+    """Cc/Bc: (B, nc, l, S); dA_cum/dt: (B, nc, l, H); xc: (B, nc, l, H, P).
+    Returns y_intra (B, nc, l, H, P)."""
+    B, nc, l, S = Cc.shape
+    H = dA_cum.shape[-1]
+    P = xc.shape[-1]
+    grid = (B, nc, H)
+
+    kernel = functools.partial(_ssd_kernel, l=l)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, l, S), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, l, S), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, l, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, l, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, l, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, l, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, l, H, P), xc.dtype),
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(Cc, Bc, dA_cum, dt, xc)

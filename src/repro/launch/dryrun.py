@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, dump roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results.jsonl
+
+The XLA_FLAGS line above MUST run before any jax import (device count locks
+on first init) — that is why it sits before the module docstring's siblings.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCHS, SKIPPED_PAIRS, get_arch, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as specs_lib
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[2,16,512]' -> bytes; '(f32[4], f32[8])' handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the (SPMD-partitioned,
+    per-device) HLO. Convention documented in EXPERIMENTS.md §Roofline."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # '%name = TYPE op-name(' — result shape sits between '=' and op name
+        for c in _COLLECTIVES:
+            marker = f" {c}("
+            alt = f" {c}-start("
+            if marker in line or alt in line:
+                lhs = line.split(marker)[0] if marker in line \
+                    else line.split(alt)[0]
+                if "=" not in lhs:
+                    continue
+                out[c] += _shape_bytes(lhs.split("=", 1)[1])
+                counts[c] += 1
+                break
+    out["counts"] = counts
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            verbose: bool = True) -> dict:
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    row = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind}
+    t0 = time.time()
+    args, shardings, step = specs_lib.input_specs(cfg, shape, mesh)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=shardings).lower(*args)
+        row["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        row["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    row["mem"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                        None),
+    }
+    row["flops_xla_body"] = cost.get("flops") if cost else None
+    row["bytes_xla_body"] = cost.get("bytes accessed") if cost else None
+    # loop-aware analysis (while-loop trip-count multipliers) — the numbers
+    # the roofline report actually uses
+    from repro.launch.hlo_analysis import analyze
+    a = analyze(compiled.as_text())
+    row["flops"] = a["flops"]
+    row["hbm_bytes"] = a["hbm_bytes"]
+    row["collectives"] = a["collective_bytes"]
+    row["collective_total"] = a["collective_total"]
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {row['mesh']}: "
+              f"lower {row['lower_s']}s compile {row['compile_s']}s")
+        print(f"  memory_analysis: {row['mem']}")
+        print(f"  per-device: flops={row['flops']:.3e} "
+              f"hbm_bytes={row['hbm_bytes']:.3e} "
+              f"collective={row['collective_total']/1e9:.2f}GB")
+        coll = {k: f"{v/1e9:.2f}GB" for k, v in row["collectives"].items() if v}
+        print(f"  collectives: {coll or 'none'}")
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every runnable (arch x shape) pair")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        pairs = [(a, s) for a in ARCHS for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}
+    failures = []
+    for arch, shape in pairs:
+        if (arch, shape) in SKIPPED_PAIRS:
+            reason = SKIPPED_PAIRS[(arch, shape)]
+            print(f"[dryrun] SKIP {arch} x {shape}: {reason}")
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps({"arch": arch, "shape": shape,
+                                        "skipped": reason}) + "\n")
+            continue
+        for mp in meshes[args.mesh]:
+            try:
+                row = run_one(arch, shape, mp)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(row) + "\n")
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                print(f"[dryrun] FAIL {arch} x {shape} "
+                      f"{'multi' if mp else 'single'}: {e!r}")
+                failures.append((arch, shape, mp, repr(e)))
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(
+                            {"arch": arch, "shape": shape,
+                             "mesh": "2x16x16" if mp else "16x16",
+                             "error": repr(e)[:500]}) + "\n")
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES")
+        sys.exit(1)
+    print("[dryrun] all combinations lowered and compiled OK")
+
+
+if __name__ == "__main__":
+    main()

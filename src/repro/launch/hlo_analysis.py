@@ -1,0 +1,261 @@
+"""Loop-aware HLO analysis for the roofline report.
+
+XLA's ``compiled.cost_analysis()`` visits each while-loop body ONCE, so any
+program built from ``lax.scan`` (layer stacks, grad accumulation, blockwise
+attention) under-counts FLOPs / bytes / collective traffic by the loop trip
+counts. This module re-derives the three roofline inputs from
+``compiled.as_text()`` with multipliers:
+
+  * computations graph: fusion ``calls=``, while ``body=/condition=``,
+    ``to_apply=``, conditional branches;
+  * while trip counts parsed from the condition's ``compare(iter, constant)``;
+  * multiplier(comp) = sum over callers of mult(caller) * trips(if while body);
+  * FLOPs: 2 * prod(result_dims) * contraction_size per dot (any computation);
+  * collective bytes: result-shape bytes per collective op (per-device HLO,
+    post-SPMD) — a consistent per-device traffic proxy;
+  * HBM bytes: operand+result bytes of top-level (non-fused) ops.
+
+Known approximations are documented in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) (?:\([^)]*\))? ?->", re.M)
+_LHS_RE = re.compile(r"^\s*(?:ROOT )?%?([\w\.\-]+) = ")
+# first lowercase identifier followed by '(' on the RHS is the opcode — HLO
+# type strings (tuples, layouts, /*index=N*/ comments) never contain one
+_OPCODE_RE = re.compile(r"([a-z][a-zA-Z0-9\-]*)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    attrs: str
+    line: str
+
+
+def parse_module(text: str):
+    """-> (comps: {name: [Op]}, shapes: {op_name: type_str})"""
+    comps, shapes = {}, {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line or line.lstrip().startswith(("//", "#")):
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*[\(]", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is None:
+            continue
+        lm = _LHS_RE.match(line)
+        if not lm:
+            continue
+        name = lm.group(1)
+        rhs = line[lm.end():]
+        om = _OPCODE_RE.search(rhs)
+        if not om:
+            continue
+        type_str = rhs[:om.start()].strip()
+        opcode = om.group(1)
+        # operand list: scan to the matching close paren
+        depth, i = 0, om.end() - 1
+        while i < len(rhs):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        operands_str = rhs[om.end(): i]
+        attrs = rhs[i + 1:]
+        operands = re.findall(r"%([\w\.\-]+)", operands_str)
+        op = Op(name, type_str, opcode, operands, attrs, line)
+        comps[cur].append(op)
+        shapes[name] = type_str
+    return comps, shapes
+
+
+def _trip_count(cond_ops, comps):
+    """Trip count of a while condition: the loop bound constant compared
+    against the induction variable. The compare may sit inside a fusion
+    called from the condition, so we look one level down too."""
+    consts = []
+    le = False
+    stack = list(cond_ops)
+    seen = set()
+    while stack:
+        op = stack.pop()
+        cm = _CONST_RE.search(op.line)
+        if op.opcode == "constant" and cm:
+            consts.append(int(cm.group(1)))
+        if op.opcode == "compare" and "direction=LE" in op.attrs:
+            le = True
+        for m in _CALL_ATTR_RE.finditer(op.attrs):
+            callee = m.group(1)
+            if callee in comps and callee not in seen:
+                seen.add(callee)
+                stack.extend(comps[callee])
+    if not consts:
+        return 1
+    n = max(consts)
+    return max(n + (1 if le else 0), 1)
+
+
+def computation_multipliers(comps):
+    """multiplier per computation, composing nested while trip counts."""
+    # edges: caller -> [(callee, factor)]
+    edges = collections.defaultdict(list)
+    trip_cache = {}
+    for cname, ops in comps.items():
+        for op in ops:
+            if op.opcode == "while":
+                body = cond = None
+                for m in _CALL_ATTR_RE.finditer(op.attrs):
+                    kind = m.group(0).split("=")[0]
+                    if kind == "body":
+                        body = m.group(1)
+                    elif kind == "condition":
+                        cond = m.group(1)
+                if body and cond and cond in comps:
+                    trips = trip_cache.setdefault(
+                        cond, _trip_count(comps[cond], comps))
+                    edges[cname].append((body, trips))
+                    edges[cname].append((cond, trips + 1))
+            else:
+                for m in _CALL_ATTR_RE.finditer(op.attrs):
+                    callee = m.group(1)
+                    if callee in comps:
+                        edges[cname].append((callee, 1))
+                bm = _BRANCHES_RE.search(op.attrs)
+                if bm:
+                    for callee in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                        if callee in comps:
+                            edges[cname].append((callee, 1))
+
+    entry = None
+    callees = {c for outs in edges.values() for c, _ in outs}
+    for c in comps:
+        if c not in callees:
+            entry = c if entry is None or "main" in c else entry
+    mult = collections.defaultdict(float)
+    mult[entry] = 1.0
+    # topological propagation (call graph is a DAG)
+    order = []
+    seen = set()
+
+    def visit(c):
+        if c in seen:
+            return
+        seen.add(c)
+        for callee, _ in edges.get(c, ()):  # post-order
+            visit(callee)
+        order.append(c)
+
+    visit(entry)
+    for c in reversed(order):
+        for callee, f in edges.get(c, ()):
+            mult[callee] += mult[c] * f
+    return dict(mult), entry
+
+
+def analyze(text: str) -> dict:
+    comps, shapes = parse_module(text)
+    mult, entry = computation_multipliers(comps)
+
+    flops = 0.0
+    coll = {c: 0.0 for c in COLLECTIVES}
+    coll_counts = {c: 0.0 for c in COLLECTIVES}
+    hbm_bytes = 0.0
+    fused = set()
+    for cname, ops in comps.items():
+        for op in ops:
+            if op.opcode == "fusion":
+                for m in _CALL_ATTR_RE.finditer(op.attrs):
+                    fused.add(m.group(1))
+
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        top_level = cname not in fused
+        for op in ops:
+            if op.opcode == "dot":
+                _, rdims = _result_dims(op.type_str)
+                lhs_shape = shapes.get(op.operands[0], "")
+                _, ldims = _result_dims(lhs_shape)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                  op.attrs)
+                csize = 1
+                if cdims and ldims:
+                    for i in cdims.group(1).split(","):
+                        if i:
+                            csize *= ldims[int(i)]
+                f = 2.0
+                for d in rdims:
+                    f *= d
+                flops += f * csize * m
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                coll[base] += _shape_bytes(op.type_str) * m
+                coll_counts[base] += m
+            if top_level and op.opcode not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "conditional"):
+                b = _shape_bytes(op.type_str)
+                for o in op.operands:
+                    b += _shape_bytes(shapes.get(o, ""))
+                hbm_bytes += b * m
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll,
+        "collective_counts": coll_counts,
+        "collective_total": sum(coll.values()),
+        "entry": entry,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,19 @@
+"""Production mesh builders (functions, never module-level constants — so
+importing this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16 data x 16 model). Multi-pod: 2 x 256."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_pipeline_mesh(n_stages: int = 4, data: int = 1):
+    """Small mesh for the shard_map pipeline executor (tests / examples)."""
+    if data > 1:
+        return jax.make_mesh((n_stages, data), ("pipe", "data"))
+    return jax.make_mesh((n_stages,), ("pipe",))

@@ -1,0 +1,226 @@
+"""ShapeDtypeStruct input specs + step builders for the multi-pod dry-run.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable stand-ins for
+every model input — no device allocation ever happens; the dry-run lowers
+against these and ``.compile()`` proves the distribution config is coherent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding
+from repro.models import api, decode
+from repro.optim import adamw, adafactor
+
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+# archs whose AdamW fp32 states cannot fit a v5e pod (DESIGN.md §6)
+ADAFACTOR_ARCHS = {"kimi-k2-1t-a32b", "jamba-1.5-large-398b", "yi-34b",
+                   "qwen2.5-72b"}
+
+
+def microbatch_rows(cfg: ModelConfig, shape: InputShape) -> int:
+    """Rows per grad-accumulation microbatch (multiple of the widest DP=32).
+
+    Fewer microbatches -> fewer FSDP weight re-gathers (they repeat every
+    microbatch pass; §Perf iteration 4 measured -46% collective on
+    qwen2.5-14b). MoE/hybrid archs keep smaller microbatches — their dispatch
+    buffers scale with tokens per microbatch and dominate peak memory."""
+    if cfg.num_experts:
+        return min(shape.global_batch, 32)
+    return min(shape.global_batch, 64)
+
+
+def model_inputs(cfg: ModelConfig, B: int, T: int, *, for_train: bool):
+    s = {"tokens": jax.ShapeDtypeStruct((B, T), I32)}
+    if for_train:
+        s["labels"] = jax.ShapeDtypeStruct((B, T), I32)
+    if cfg.family == "vlm":
+        s["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), BF16)
+    if cfg.family == "audio":
+        s["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), BF16)
+    return s
+
+
+def params_shape(cfg: ModelConfig, max_seq: int):
+    return jax.eval_shape(
+        lambda k: api.init_params(cfg, k, max_seq=max_seq),
+        jax.random.PRNGKey(0))
+
+
+def _total_params(pshape) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(pshape))
+
+
+def fsdp_threshold(cfg: ModelConfig, pshape, mesh, *, training: bool) -> int:
+    """FSDP (ZeRO-3 over 'data') only when the TP-sharded state cannot fit a
+    16 GB v5e chip: training counts params+grads+optimizer (~14 B/param with
+    AdamW, ~6 with Adafactor+bf16 accum), inference counts bf16 params only.
+    Below that, re-gathering weights every layer/microbatch is pure
+    collective waste (§Perf iterations 1-2)."""
+    msz = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    n = _total_params(pshape)
+    if training:
+        per_param = 6 if cfg.name in ADAFACTOR_ARCHS else 14
+    else:
+        per_param = 2
+    per_chip = n * per_param / msz
+    if per_chip > 12e9:
+        return sharding.FSDP_THRESHOLD
+    return 1 << 60          # effectively disables FSDP
+
+
+def opt_shape(cfg: ModelConfig, pshape, arch_name: str):
+    if arch_name in ADAFACTOR_ARCHS:
+        return jax.eval_shape(adafactor.adafactor_init, pshape)
+    return jax.eval_shape(adamw.adamw_init, pshape)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    """-> (arg_structs tuple, in_shardings tuple, step_fn) for the shape kind."""
+    import dataclasses
+    msz = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if cfg.num_heads and cfg.num_heads % msz:
+        # pad head counts to the TP width so attention shards (§Perf iter 3)
+        cfg = dataclasses.replace(cfg, pad_heads_to=msz)
+    if shape.kind == "train":
+        return _train_specs(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return _prefill_specs(cfg, shape, mesh)
+    return _decode_specs(cfg, shape, mesh)
+
+
+# ----------------------------------------------------------------- train ----
+def make_train_step(cfg: ModelConfig, shape: InputShape, arch_name: str,
+                    *, blockwise_threshold: int = 2048, dp=("data",),
+                    model_size: int = 16, mesh=None):
+    m = microbatch_rows(cfg, shape)
+    nmb = shape.global_batch // m
+    use_adafactor = arch_name in ADAFACTOR_ARCHS
+    accum_dtype = jnp.bfloat16 if use_adafactor else jnp.float32
+    total_tokens = shape.global_batch * shape.seq_len
+
+    from repro.models.layers import batch_sharding
+
+    def mb_loss(p, mb):
+        mb = jax.tree.map(lambda x: jax.lax.with_sharding_constraint(
+            x, P(dp, *([None] * (x.ndim - 1)))), mb)
+        with batch_sharding(dp, model_size, mesh=mesh):
+            logits, _, aux = api.forward(
+                cfg, p, mb, remat=True,
+                blockwise_threshold=blockwise_threshold)
+        # keep logits vocab-sharded through the loss (Megatron vocab-parallel
+        # cross entropy: lse reduce + label gather stay distributed)
+        logits = jax.lax.with_sharding_constraint(
+            logits, P(dp, None, "model"))
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, mb["labels"][..., None], axis=-1)[..., 0]
+        return nll.sum() / total_tokens + aux["moe_aux"] / nmb
+
+    def train_step(params, opt_state, batch):
+        def reshape(x):
+            x = x.reshape(nmb, m, *x.shape[1:])
+            return jax.lax.with_sharding_constraint(
+                x, P(None, dp, *([None] * (x.ndim - 2))))
+        mbs = jax.tree.map(reshape, batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+        def body(carry, mb):
+            gacc, lacc = carry
+            l, g = jax.value_and_grad(mb_loss)(params, mb)
+            gacc = jax.tree.map(lambda a, b: a + b.astype(accum_dtype),
+                                gacc, g)
+            return (gacc, lacc + l), None
+
+        (grads, loss), _ = jax.lax.scan(body, (g0, jnp.zeros(())), mbs)
+        if use_adafactor:
+            new_params, new_opt = adafactor.adafactor_update(
+                params, grads, opt_state, lr=1e-4)
+        else:
+            new_params, new_opt, _ = adamw.adamw_update(
+                params, grads, opt_state, lr=1e-4)
+        return new_params, new_opt, loss
+
+    return train_step, nmb
+
+
+def _train_specs(cfg, shape, mesh):
+    pshape = params_shape(cfg, max_seq=shape.seq_len)
+    oshape = opt_shape(cfg, pshape, cfg.name)
+    thr = fsdp_threshold(cfg, pshape, mesh, training=True)
+    pspecs = sharding.param_specs(cfg, pshape, mesh, fsdp_threshold=thr)
+    if cfg.name in ADAFACTOR_ARCHS:
+        ospecs = sharding.adafactor_opt_specs(pspecs, pshape)
+    else:
+        ospecs = sharding.adamw_opt_specs(pspecs)
+    binputs = model_inputs(cfg, shape.global_batch, shape.seq_len,
+                           for_train=True)
+    bspecs = sharding.batch_specs(cfg, binputs, mesh)
+    step, _ = make_train_step(cfg, shape, cfg.name,
+                              dp=sharding.dp_axes(mesh), mesh=mesh)
+    to_sharding = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P))
+    args = (pshape, oshape, binputs)
+    shardings = (to_sharding(pspecs), to_sharding(ospecs), to_sharding(bspecs))
+    return args, shardings, step
+
+
+# --------------------------------------------------------------- prefill ----
+def _prefill_specs(cfg, shape, mesh):
+    pshape = params_shape(cfg, max_seq=shape.seq_len)
+    thr = fsdp_threshold(cfg, pshape, mesh, training=False)
+    pspecs = sharding.param_specs(cfg, pshape, mesh, fsdp_threshold=thr)
+    binputs = model_inputs(cfg, shape.global_batch, shape.seq_len,
+                           for_train=False)
+    bspecs = sharding.batch_specs(cfg, binputs, mesh)
+
+    def prefill_step(params, batch):
+        logits, state, _ = api.forward(cfg, params, batch,
+                                       blockwise_threshold=4096)
+        return logits[:, -1:], state
+
+    to_sharding = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P))
+    return ((pshape, binputs),
+            (to_sharding(pspecs), to_sharding(bspecs)), prefill_step)
+
+
+# ---------------------------------------------------------------- decode ----
+def _decode_specs(cfg, shape, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    pshape = params_shape(cfg, max_seq=S)
+    thr = fsdp_threshold(cfg, pshape, mesh, training=False)
+    pspecs = sharding.param_specs(cfg, pshape, mesh, fsdp_threshold=thr)
+    # sliding-window ring cache for local/global archs at long context
+    # (§Perf: halves gemma2's 500K cache — local layers hold W slots)
+    ring = bool(cfg.local_global_alternate and cfg.sliding_window
+                and S >= 131_072)
+    cshape = jax.eval_shape(
+        lambda: decode.init_decode_cache(cfg, B, S, dtype=BF16,
+                                         ring_local=ring))
+    cspecs = sharding.cache_specs(cfg, cshape, mesh, B)
+    tok = jax.ShapeDtypeStruct((B, 1), I32)
+    clen = jax.ShapeDtypeStruct((), I32)
+
+    def serve_step(params, cache, tokens, cache_len):
+        return decode.decode_step(cfg, params, cache, tokens, cache_len)
+
+    to_sharding = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P))
+    tok_spec = sharding.batch_specs(cfg, {"tokens": tok}, mesh)["tokens"]
+    return ((pshape, cshape, tok, clen),
+            (to_sharding(pspecs), to_sharding(cspecs),
+             NamedSharding(mesh, tok_spec), NamedSharding(mesh, P())),
+            serve_step)

@@ -1,0 +1,443 @@
+"""Unified model API for all assigned architecture families.
+
+Contract (the ChunkFlow state protocol, DESIGN.md §4):
+
+    init_params(cfg, key, max_seq)            -> params pytree
+    forward(cfg, params, batch, state=None)   -> (logits, new_state, aux)
+    init_decode_cache(cfg, batch, max_seq)    -> cache pytree
+    decode_step(cfg, params, cache, tokens, cache_len, ...) -> (logits, cache)
+
+``state`` carries what a *later chunk of the same sequence* needs from earlier
+chunks: per-layer K/V (+ their positions/segments) for attention layers, the
+SSD recurrent state + conv tail for mamba layers, the encoder output for
+enc-dec. ``forward`` both consumes and extends it, so the ChunkFlow scheduler
+(core/chunked_step.py) can thread it through Algorithm 2.
+
+batch keys: tokens (B,T) int32; segment_ids (B,T) int32 (0 = pad);
+positions (B,T) int32 — or (B,T,3) for M-RoPE; encoder_embeds (B,Se,D) for
+audio; patch_embeds (B,Np,D) for vlm.
+
+Layers are scanned with stacked params so the HLO stays small for 61–80 layer
+configs (compile-time matters: the dry-run lowers these on one CPU core).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2, moe as moe_lib
+
+BIG_WINDOW = 1 << 30
+VOCAB_PAD_UNIT = 256          # Megatron-style vocab padding (TP divisibility)
+VOCAB_PAD_MIN = 1024          # only pad production-sized vocabs
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    v = cfg.vocab_size
+    if v < VOCAB_PAD_MIN:
+        return v
+    return -(-v // VOCAB_PAD_UNIT) * VOCAB_PAD_UNIT
+
+
+# ============================================================== param init ===
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _init_decoder_layer(cfg: ModelConfig, dtype):
+    def f(key):
+        ks = jax.random.split(key, 4)
+        p = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+        }
+        if cfg.num_experts:
+            p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        return p
+    return f
+
+
+def _layer_windows(cfg: ModelConfig) -> np.ndarray:
+    if cfg.sliding_window and cfg.local_global_alternate:
+        return np.array([cfg.sliding_window if i % 2 == 0 else BIG_WINDOW
+                         for i in range(cfg.num_layers)], np.int32)
+    if cfg.sliding_window:
+        return np.full((cfg.num_layers,), cfg.sliding_window, np.int32)
+    return np.full((cfg.num_layers,), BIG_WINDOW, np.int32)
+
+
+def init_params(cfg: ModelConfig, key, max_seq: int = 4096):
+    dtype = jnp.dtype(cfg.dtype)
+    vp = padded_vocab(cfg)
+    ks = jax.random.split(key, 8)
+    if cfg.family in ("dense", "moe", "vlm"):
+        p = {
+            "embed": L.dense_init(ks[0], (vp, cfg.d_model), dtype=dtype),
+            "layers": _stack_init(_init_decoder_layer(cfg, dtype), ks[1],
+                                  cfg.num_layers),
+            "ln_f": jnp.zeros((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = L.dense_init(ks[2], (cfg.d_model, vp),
+                                        dtype=dtype)
+        return p
+
+    if cfg.family == "ssm":
+        return {
+            "embed": L.dense_init(ks[0], (vp, cfg.d_model), dtype=dtype),
+            "layers": _stack_init(
+                lambda k: {"ln": jnp.zeros((cfg.d_model,), dtype),
+                           "mamba": mamba2.init_mamba(k, cfg, dtype)},
+                ks[1], cfg.num_layers),
+            "ln_f": jnp.zeros((cfg.d_model,), dtype),
+            "unembed": L.dense_init(ks[2], (cfg.d_model, vp),
+                                    dtype=dtype),
+        }
+
+    if cfg.family == "hybrid":
+        nb = cfg.num_layers // cfg.attn_every
+        nm = cfg.attn_every - 1          # mamba sublayers per block
+
+        def block(key):
+            bk = jax.random.split(key, 6)
+            return {
+                "mamba": _stack_init(
+                    lambda k: {"ln": jnp.zeros((cfg.d_model,), dtype),
+                               "mamba": mamba2.init_mamba(k, cfg, dtype)},
+                    bk[0], nm),
+                "moe_m": _stack_init(
+                    lambda k: {"ln": jnp.zeros((cfg.d_model,), dtype),
+                               "moe": moe_lib.init_moe(k, cfg, dtype)},
+                    bk[1], nm),
+                "attn": {"ln": jnp.zeros((cfg.d_model,), dtype),
+                         "attn": L.init_attention(bk[2], cfg, dtype)},
+                "moe_a": {"ln": jnp.zeros((cfg.d_model,), dtype),
+                          "moe": moe_lib.init_moe(bk[3], cfg, dtype)},
+            }
+
+        return {
+            "embed": L.dense_init(ks[0], (vp, cfg.d_model), dtype=dtype),
+            "blocks": _stack_init(block, ks[1], nb),
+            "ln_f": jnp.zeros((cfg.d_model,), dtype),
+            "unembed": L.dense_init(ks[2], (cfg.d_model, vp),
+                                    dtype=dtype),
+        }
+
+    if cfg.family == "audio":
+        def enc_layer(key):
+            kk = jax.random.split(key, 2)
+            return {
+                "ln1_w": jnp.ones((cfg.d_model,), dtype),
+                "ln1_b": jnp.zeros((cfg.d_model,), dtype),
+                "ln2_w": jnp.ones((cfg.d_model,), dtype),
+                "ln2_b": jnp.zeros((cfg.d_model,), dtype),
+                "attn": L.init_attention(kk[0], cfg, dtype),
+                "mlp": L.init_gelu_mlp(kk[1], cfg.d_model, cfg.d_ff, dtype),
+            }
+
+        def dec_layer(key):
+            kk = jax.random.split(key, 3)
+            return {
+                "ln1_w": jnp.ones((cfg.d_model,), dtype),
+                "ln1_b": jnp.zeros((cfg.d_model,), dtype),
+                "ln2_w": jnp.ones((cfg.d_model,), dtype),
+                "ln2_b": jnp.zeros((cfg.d_model,), dtype),
+                "ln3_w": jnp.ones((cfg.d_model,), dtype),
+                "ln3_b": jnp.zeros((cfg.d_model,), dtype),
+                "self_attn": L.init_attention(kk[0], cfg, dtype),
+                "cross_attn": L.init_attention(kk[1], cfg, dtype),
+                "mlp": L.init_gelu_mlp(kk[2], cfg.d_model, cfg.d_ff, dtype),
+            }
+
+        return {
+            "enc_pos": L.dense_init(ks[0], (cfg.encoder_seq, cfg.d_model),
+                                    dtype=dtype),
+            "enc_layers": _stack_init(enc_layer, ks[1], cfg.encoder_layers),
+            "enc_ln_f_w": jnp.ones((cfg.d_model,), dtype),
+            "enc_ln_f_b": jnp.zeros((cfg.d_model,), dtype),
+            "embed": L.dense_init(ks[2], (vp, cfg.d_model), dtype=dtype),
+            "dec_pos": L.dense_init(ks[3], (max_seq, cfg.d_model), dtype=dtype),
+            "dec_layers": _stack_init(dec_layer, ks[4], cfg.num_layers),
+            "dec_ln_f_w": jnp.ones((cfg.d_model,), dtype),
+            "dec_ln_f_b": jnp.zeros((cfg.d_model,), dtype),
+        }
+
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# ============================================================ empty states ===
+def empty_state(cfg: ModelConfig, batch: int, dtype=None):
+    """Zero-length chunk state — lets forward() use one code path."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+
+    def attn_state(n_layers):
+        return {
+            "k": jnp.zeros((n_layers, batch, 0, cfg.padded_num_kv_heads, hd), dtype),
+            "v": jnp.zeros((n_layers, batch, 0, cfg.padded_num_kv_heads, hd), dtype),
+            "pos": jnp.zeros((batch, 0), jnp.int32),
+            "seg": jnp.zeros((batch, 0), jnp.int32),
+        }
+
+    def mamba_state(shape_prefix):
+        G = 1
+        conv_dim = cfg.d_inner + 2 * G * cfg.ssm_state
+        return {
+            "ssm": jnp.zeros(shape_prefix + (batch, cfg.ssm_heads,
+                                             cfg.ssm_head_dim, cfg.ssm_state),
+                             jnp.float32),
+            "conv": jnp.zeros(shape_prefix + (batch, cfg.ssm_conv_width - 1,
+                                              conv_dim), jnp.float32),
+        }
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return attn_state(cfg.num_layers)
+    if cfg.family == "ssm":
+        return mamba_state((cfg.num_layers,))
+    if cfg.family == "hybrid":
+        nb = cfg.num_layers // cfg.attn_every
+        return {"attn": attn_state(nb),
+                "mamba": mamba_state((nb, cfg.attn_every - 1))}
+    if cfg.family == "audio":
+        st = attn_state(cfg.num_layers)
+        st["enc_out"] = None    # filled by the first chunk's encoder pass
+        return st
+    raise ValueError(cfg.family)
+
+
+# ================================================================= forward ===
+def forward(cfg: ModelConfig, params, batch, state=None,
+            blockwise_threshold: int = 8192, remat: bool = False):
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    seg = batch.get("segment_ids")
+    if seg is None:
+        seg = jnp.ones((B, T), jnp.int32)
+    pos = batch.get("positions")
+    if pos is None:
+        base = jnp.arange(T, dtype=jnp.int32)[None].repeat(B, 0)
+        pos = (jnp.stack([base] * 3, axis=-1) if cfg.mrope else base)
+    if state is None:
+        state = empty_state(cfg, B)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _decoder_forward(cfg, params, tokens, seg, pos, batch, state,
+                                blockwise_threshold, remat)
+    if cfg.family == "ssm":
+        return _ssm_forward(cfg, params, tokens, seg, state, remat)
+    if cfg.family == "hybrid":
+        return _hybrid_forward(cfg, params, tokens, seg, pos, state,
+                               blockwise_threshold, remat)
+    if cfg.family == "audio":
+        return _audio_forward(cfg, params, tokens, seg, pos, batch, state,
+                              remat)
+    raise ValueError(cfg.family)
+
+
+def _unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["unembed"]
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = L.softcap(logits, cfg.logit_softcap)
+    vp = padded_vocab(cfg)
+    if vp != cfg.vocab_size:
+        mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def _decoder_forward(cfg, params, tokens, seg, pos, batch, state, bwt,
+                     remat=False):
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.family == "vlm" and batch.get("patch_embeds") is not None:
+        npatch = batch["patch_embeds"].shape[1]
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(x.dtype), x[:, npatch:]], axis=1)
+
+    windows = jnp.asarray(_layer_windows(cfg))
+
+    def layer_fn(carry, xs):
+        x, aux = carry
+        lp, window, pk, pv = xs
+        prefix = {"k": pk, "v": pv, "pos": state["pos"], "seg": state["seg"]}
+        h, new_kv = L.attention_layer(
+            lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+            positions=pos, segment_ids=seg, prefix=prefix, window=window,
+            blockwise_threshold=bwt)
+        x = x + h
+        xn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.num_experts:
+            h2, a = moe_lib.moe_layer(lp["moe"], xn, cfg)
+            aux = aux + a
+        else:
+            h2 = L.swiglu_mlp(lp["mlp"], xn)
+        return (x + h2, aux), new_kv
+
+    body = jax.checkpoint(layer_fn) if remat else layer_fn
+    (x, aux), new_kvs = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], windows, state["k"], state["v"]))
+
+    pos1d = pos[..., 0] if cfg.mrope else pos
+    new_state = {
+        "k": jnp.concatenate([state["k"], new_kvs["k"]], axis=2),
+        "v": jnp.concatenate([state["v"], new_kvs["v"]], axis=2),
+        "pos": jnp.concatenate([state["pos"], pos1d], axis=1),
+        "seg": jnp.concatenate([state["seg"], seg], axis=1),
+    }
+    logits = _unembed(cfg, params, L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+    return logits, new_state, {"moe_aux": aux}
+
+
+def _ssm_forward(cfg, params, tokens, seg, state, remat=False):
+    x = params["embed"][tokens]
+
+    def layer_fn(x, xs):
+        lp, st = xs
+        h, new_st = mamba2.mamba_layer(lp["mamba"],
+                                       L.rms_norm(x, lp["ln"], cfg.norm_eps),
+                                       cfg, state=st, segment_ids=seg)
+        return x + h, new_st
+
+    body = jax.checkpoint(layer_fn) if remat else layer_fn
+    x, new_states = jax.lax.scan(body, x, (params["layers"], state))
+    logits = _unembed(cfg, params, L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+    return logits, new_states, {"moe_aux": jnp.zeros((), jnp.float32)}
+
+
+def _hybrid_forward(cfg, params, tokens, seg, pos, state, bwt,
+                    remat=False):
+    x = params["embed"][tokens]
+
+    def block_fn(carry, xs):
+        x, aux = carry
+        bp, m_st, pk, pv = xs
+
+        def sub_fn(carry, sub_xs):
+            x, aux = carry
+            mp, op, st = sub_xs
+            h, new_st = mamba2.mamba_layer(
+                mp["mamba"], L.rms_norm(x, mp["ln"], cfg.norm_eps), cfg,
+                state=st, segment_ids=seg)
+            x = x + h
+            h2, a = moe_lib.moe_layer(
+                op["moe"], L.rms_norm(x, op["ln"], cfg.norm_eps), cfg)
+            return (x + h2, aux + a), new_st
+
+        (x, aux), new_m_st = jax.lax.scan(
+            sub_fn, (x, aux), (bp["mamba"], bp["moe_m"], m_st))
+
+        prefix = {"k": pk, "v": pv, "pos": state["attn"]["pos"],
+                  "seg": state["attn"]["seg"]}
+        h, new_kv = L.attention_layer(
+            bp["attn"]["attn"],
+            L.rms_norm(x, bp["attn"]["ln"], cfg.norm_eps), cfg,
+            positions=pos, segment_ids=seg, prefix=prefix,
+            blockwise_threshold=bwt)
+        x = x + h
+        h2, a = moe_lib.moe_layer(
+            bp["moe_a"]["moe"],
+            L.rms_norm(x, bp["moe_a"]["ln"], cfg.norm_eps), cfg)
+        return (x + h2, aux + a), (new_m_st, new_kv)
+
+    block_body = jax.checkpoint(block_fn) if remat else block_fn
+    (x, aux), (new_m, new_kvs) = jax.lax.scan(
+        block_body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], state["mamba"], state["attn"]["k"],
+         state["attn"]["v"]))
+
+    new_state = {
+        "attn": {
+            "k": jnp.concatenate([state["attn"]["k"], new_kvs["k"]], axis=2),
+            "v": jnp.concatenate([state["attn"]["v"], new_kvs["v"]], axis=2),
+            "pos": jnp.concatenate([state["attn"]["pos"], pos], axis=1),
+            "seg": jnp.concatenate([state["attn"]["seg"], seg], axis=1),
+        },
+        "mamba": new_m,
+    }
+    logits = _unembed(cfg, params, L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+    return logits, new_state, {"moe_aux": aux}
+
+
+def encode_audio(cfg, params, encoder_embeds):
+    """Whisper encoder over stub frame embeddings (B, Se, D)."""
+    x = encoder_embeds.astype(params["enc_pos"].dtype) + params["enc_pos"][None]
+    B, Se, _ = x.shape
+    ones = jnp.ones((B, Se), jnp.int32)
+    zeros = jnp.zeros((B, Se), jnp.int32)
+
+    def layer_fn(x, lp):
+        xn = L.layer_norm(x, lp["ln1_w"], lp["ln1_b"])
+        mask = L.make_attention_mask(zeros, zeros, ones, ones, causal=False)
+        hd = cfg.resolved_head_dim
+        q = (xn @ lp["attn"]["wq"]).reshape(B, Se, cfg.padded_num_heads, hd)
+        k = (xn @ lp["attn"]["wk"]).reshape(B, Se, cfg.padded_num_kv_heads, hd)
+        v = (xn @ lp["attn"]["wv"]).reshape(B, Se, cfg.padded_num_kv_heads, hd)
+        h = L.sdpa(q, k, v, mask).reshape(B, Se, cfg.padded_num_heads * hd)
+        x = x + h @ lp["attn"]["wo"]
+        xn = L.layer_norm(x, lp["ln2_w"], lp["ln2_b"])
+        return x + L.gelu_mlp(lp["mlp"], xn), None
+
+    x, _ = jax.lax.scan(layer_fn, x, params["enc_layers"])
+    return L.layer_norm(x, params["enc_ln_f_w"], params["enc_ln_f_b"])
+
+
+def _audio_forward(cfg, params, tokens, seg, pos, batch, state,
+                   remat=False):
+    B, T = tokens.shape
+    hd = cfg.resolved_head_dim
+    enc_out = state.get("enc_out")
+    if enc_out is None:
+        enc_out = encode_audio(cfg, params, batch["encoder_embeds"])
+    Se = enc_out.shape[1]
+    enc_seg = jnp.ones((B, Se), jnp.int32)
+
+    x = params["embed"][tokens] + params["dec_pos"][pos]
+
+    def layer_fn(x, xs):
+        lp, pk, pv = xs
+        prefix = {"k": pk, "v": pv, "pos": state["pos"], "seg": state["seg"]}
+        xn = L.layer_norm(x, lp["ln1_w"], lp["ln1_b"])
+        h, new_kv = L.attention_layer(lp["self_attn"], xn, cfg, positions=pos,
+                                      segment_ids=seg, prefix=prefix)
+        x = x + h
+        # cross attention
+        xn = L.layer_norm(x, lp["ln2_w"], lp["ln2_b"])
+        ck = (enc_out @ lp["cross_attn"]["wk"]).reshape(B, Se, cfg.padded_num_kv_heads, hd)
+        cv = (enc_out @ lp["cross_attn"]["wv"]).reshape(B, Se, cfg.padded_num_kv_heads, hd)
+        h, _ = L.attention_layer(lp["cross_attn"], xn, cfg, positions=pos,
+                                 segment_ids=seg,
+                                 cross_kv={"k": ck, "v": cv, "seg": enc_seg})
+        x = x + h
+        xn = L.layer_norm(x, lp["ln3_w"], lp["ln3_b"])
+        return x + L.gelu_mlp(lp["mlp"], xn), new_kv
+
+    body = jax.checkpoint(layer_fn) if remat else layer_fn
+    x, new_kvs = jax.lax.scan(body, x, (params["dec_layers"], state["k"],
+                                        state["v"]))
+    new_state = {
+        "k": jnp.concatenate([state["k"], new_kvs["k"]], axis=2),
+        "v": jnp.concatenate([state["v"], new_kvs["v"]], axis=2),
+        "pos": jnp.concatenate([state["pos"], pos], axis=1),
+        "seg": jnp.concatenate([state["seg"], seg], axis=1),
+        "enc_out": enc_out,
+    }
+    x = L.layer_norm(x, params["dec_ln_f_w"], params["dec_ln_f_b"])
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    vp = padded_vocab(cfg)
+    if vp != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(vp) < cfg.vocab_size, logits, -1e30)
+    return logits, new_state, {"moe_aux": jnp.zeros((), jnp.float32)}

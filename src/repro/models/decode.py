@@ -1,0 +1,318 @@
+"""Single-token decode with KV / recurrent caches (serve_step substrate).
+
+Cache layout (per family):
+  dense/moe/vlm : {"k","v": (L, B, S, Hkv, hd)}            + scalar cache_len
+  ssm           : {"ssm": (L,B,H,P,S), "conv": (L,B,W-1,CD)}
+  hybrid        : {"attn": {k,v (nb,...)}, "mamba": {... (nb, nm, ...)}}
+  audio         : {"k","v" self (L,...), "ck","cv" cross (L,B,Se,Hkv,hd)}
+
+decode_step writes the new token's K/V at slot ``cache_len`` and attends to
+slots ``<= cache_len``. Sliding-window layers (gemma2 local) mask by position
+distance — the cache stays full-size in the baseline (see EXPERIMENTS.md §Perf
+for the ring-buffer optimization).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2, moe as moe_lib
+from repro.models.api import _layer_windows, _unembed, encode_audio, BIG_WINDOW
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
+                      ring_local: bool = False):
+    """ring_local: for local/global alternating archs (gemma2), allocate the
+    local layers' cache as a sliding-window ring of ``cfg.sliding_window``
+    slots instead of max_seq — the §Perf memory optimization for 500K decode
+    (half the layers hold 4K slots instead of 512K)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+
+    def kv(n_layers, seq):
+        return {
+            "k": jnp.zeros((n_layers, batch, seq, cfg.padded_num_kv_heads, hd), dtype),
+            "v": jnp.zeros((n_layers, batch, seq, cfg.padded_num_kv_heads, hd), dtype),
+        }
+
+    if ring_local and cfg.local_global_alternate and cfg.sliding_window:
+        assert cfg.family in ("dense", "moe", "vlm")
+        assert cfg.num_layers % 2 == 0
+        half = cfg.num_layers // 2
+        g = kv(half, max_seq)                     # odd layers: global
+        l = kv(half, cfg.sliding_window)          # even layers: local ring
+        return {"k_global": g["k"], "v_global": g["v"],
+                "k_local": l["k"], "v_local": l["v"],
+                "ring_pos": jnp.full((cfg.sliding_window,), -1, jnp.int32)}
+
+    def mamba_state(prefix):
+        G = 1
+        conv_dim = cfg.d_inner + 2 * G * cfg.ssm_state
+        return {
+            "ssm": jnp.zeros(prefix + (batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                       cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros(prefix + (batch, cfg.ssm_conv_width - 1, conv_dim),
+                              jnp.float32),
+        }
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return kv(cfg.num_layers, max_seq)
+    if cfg.family == "ssm":
+        return mamba_state((cfg.num_layers,))
+    if cfg.family == "hybrid":
+        nb = cfg.num_layers // cfg.attn_every
+        return {"attn": kv(nb, max_seq),
+                "mamba": mamba_state((nb, cfg.attn_every - 1))}
+    if cfg.family == "audio":
+        c = kv(cfg.num_layers, max_seq)
+        c["ck"] = jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                             cfg.padded_num_kv_heads, hd), dtype)
+        c["cv"] = jnp.zeros_like(c["ck"])
+        return c
+    raise ValueError(cfg.family)
+
+
+def _decode_attn(p, x, cfg, cache_k, cache_v, cache_len, window,
+                 attn_softcap):
+    """x: (B,1,D). Returns (out (B,1,D), new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    S = cache_k.shape[1]      # (B, S, Hkv, hd)
+
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, cfg.padded_num_heads, hd)
+    k = k.reshape(B, 1, cfg.padded_num_kv_heads, hd)
+    v = v.reshape(B, 1, cfg.padded_num_kv_heads, hd)
+
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    if cfg.rope_theta:
+        if cfg.mrope:
+            pos3 = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+            q = L.apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+            k = L.apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                                  cache_len, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                                  cache_len, axis=1)
+
+    slots = jnp.arange(S, dtype=jnp.int32)
+    valid = slots <= cache_len
+    if window is not None:
+        valid &= (cache_len - slots) < window
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, S))
+    out = L.sdpa(q, cache_k, cache_v, mask, attn_softcap=attn_softcap)
+    out = out.reshape(B, 1, cfg.padded_num_heads * hd) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+def _decode_attn_ring(p, x, cfg, ck, cv, ring_pos, cache_len, attn_softcap):
+    """Sliding-window decode against a ring cache. ck/cv: (B, W, Hkv, hd);
+    ring_pos: (W,) absolute position held in each slot (-1 = empty)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    W = ck.shape[1]
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, cfg.padded_num_heads, hd)
+    k = k.reshape(B, 1, cfg.padded_num_kv_heads, hd)
+    v = v.reshape(B, 1, cfg.padded_num_kv_heads, hd)
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    if cfg.rope_theta:
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+    slot = cache_len % W
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, 1)
+    new_ring = ring_pos.at[slot].set(cache_len)
+    valid = (new_ring >= 0) & (new_ring <= cache_len) \
+        & ((cache_len - new_ring) < cfg.sliding_window)
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, W))
+    out = L.sdpa(q, ck, cv, mask, attn_softcap=attn_softcap)
+    out = out.reshape(B, 1, cfg.padded_num_heads * hd) @ p["wo"]
+    return out, ck, cv, new_ring
+
+
+def _decode_ring_pairs(cfg, params, cache, tokens, cache_len):
+    """Local/global alternating decode with ring local caches (gemma2)."""
+    x = params["embed"][tokens]
+    stacked = params["layers"]
+    half = cfg.num_layers // 2
+    pair = lambda a: a.reshape(half, 2, *a.shape[1:])
+    pairs = jax.tree.map(pair, stacked)
+    ring0 = cache["ring_pos"]
+
+    def pair_fn(carry, xs):
+        x, ring = carry
+        pp, lk, lv, gk, gv = xs
+        loc = jax.tree.map(lambda a: a[0], pp)
+        glo = jax.tree.map(lambda a: a[1], pp)
+        h, lk, lv, ring = _decode_attn_ring(
+            loc["attn"], L.rms_norm(x, loc["ln1"], cfg.norm_eps), cfg,
+            lk, lv, ring, cache_len, cfg.attn_softcap)
+        x = x + h
+        x = x + L.swiglu_mlp(loc["mlp"],
+                             L.rms_norm(x, loc["ln2"], cfg.norm_eps))
+        h, gk, gv = _decode_attn(glo["attn"],
+                                 L.rms_norm(x, glo["ln1"], cfg.norm_eps),
+                                 cfg, gk, gv, cache_len, None,
+                                 cfg.attn_softcap)
+        x = x + h
+        x = x + L.swiglu_mlp(glo["mlp"],
+                             L.rms_norm(x, glo["ln2"], cfg.norm_eps))
+        return (x, ring), (lk, lv, gk, gv)
+
+    (x, ring), (lk, lv, gk, gv) = jax.lax.scan(
+        pair_fn, (x, ring0),
+        (pairs, cache["k_local"], cache["v_local"], cache["k_global"],
+         cache["v_global"]))
+    logits = _unembed(cfg, params, L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+    return logits, {"k_local": lk, "v_local": lv, "k_global": gk,
+                    "v_global": gv, "ring_pos": ring}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, cache_len,
+                positions=None):
+    """tokens: (B, 1) -> (logits (B,1,V), new_cache). cache_len: scalar int."""
+    B = tokens.shape[0]
+
+    if isinstance(cache, dict) and "k_local" in cache:
+        return _decode_ring_pairs(cfg, params, cache, tokens, cache_len)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x = params["embed"][tokens]
+        windows = jnp.asarray(_layer_windows(cfg))
+
+        def layer_fn(x, xs):
+            lp, window, ck, cv = xs
+            h, ck, cv = _decode_attn(lp["attn"],
+                                     L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                     cfg, ck, cv, cache_len, window,
+                                     cfg.attn_softcap)
+            x = x + h
+            xn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.num_experts:
+                h2, _ = moe_lib.moe_layer(lp["moe"], xn, cfg)
+            else:
+                h2 = L.swiglu_mlp(lp["mlp"], xn)
+            return x + h2, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(
+            layer_fn, x, (params["layers"], windows, cache["k"], cache["v"]))
+        logits = _unembed(cfg, params,
+                          L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+        return logits, {"k": nk, "v": nv}
+
+    if cfg.family == "ssm":
+        x = params["embed"][tokens]
+
+        def layer_fn(x, xs):
+            lp, st = xs
+            h, new_st = mamba2.mamba_decode_step(
+                lp["mamba"], L.rms_norm(x, lp["ln"], cfg.norm_eps), cfg, st)
+            return x + h, new_st
+
+        x, new_state = jax.lax.scan(layer_fn, x, (params["layers"], cache))
+        logits = _unembed(cfg, params,
+                          L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+        return logits, new_state
+
+    if cfg.family == "hybrid":
+        x = params["embed"][tokens]
+
+        def block_fn(x, xs):
+            bp, m_st, ck, cv = xs
+
+            def sub_fn(x, sub):
+                mp, st = sub
+                h, new_st = mamba2.mamba_decode_step(
+                    mp["mamba"], L.rms_norm(x, mp["ln"], cfg.norm_eps), cfg, st)
+                return x + h, new_st
+
+            x, new_m = jax.lax.scan(sub_fn, x, (bp["mamba"], m_st))
+            # (hybrid blocks keep the MoE MLP after each mixer)
+            def moe_res(x, op):
+                h, _ = moe_lib.moe_layer(
+                    op["moe"], L.rms_norm(x, op["ln"], cfg.norm_eps), cfg)
+                return x + h
+
+            x, _ = jax.lax.scan(lambda xx, op: (moe_res(xx, op), None),
+                                x, bp["moe_m"])
+            h, ck, cv = _decode_attn(
+                bp["attn"]["attn"],
+                L.rms_norm(x, bp["attn"]["ln"], cfg.norm_eps), cfg, ck, cv,
+                cache_len, None, cfg.attn_softcap)
+            x = x + h
+            x = moe_res(x, bp["moe_a"])
+            return x, (new_m, ck, cv)
+
+        x, (new_m, nk, nv) = jax.lax.scan(
+            block_fn, x,
+            (params["blocks"], cache["mamba"], cache["attn"]["k"],
+             cache["attn"]["v"]))
+        logits = _unembed(cfg, params,
+                          L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+        return logits, {"attn": {"k": nk, "v": nv}, "mamba": new_m}
+
+    if cfg.family == "audio":
+        x = params["embed"][tokens] + params["dec_pos"][
+            jnp.full((B, 1), cache_len, jnp.int32)]
+        hd = cfg.resolved_head_dim
+        Se = cfg.encoder_seq
+
+        def layer_fn(x, xs):
+            lp, ck, cv, xk, xv = xs
+            h, ck, cv = _decode_attn(
+                lp["self_attn"], L.layer_norm(x, lp["ln1_w"], lp["ln1_b"]),
+                cfg, ck, cv, cache_len, None, 0.0)
+            x = x + h
+            xn = L.layer_norm(x, lp["ln2_w"], lp["ln2_b"])
+            q = (xn @ lp["cross_attn"]["wq"]).reshape(B, 1, cfg.padded_num_heads, hd)
+            mask = jnp.ones((B, 1, Se), bool)
+            h = L.sdpa(q, xk, xv, mask)
+            h = h.reshape(B, 1, cfg.padded_num_heads * hd) @ lp["cross_attn"]["wo"]
+            x = x + h
+            xn = L.layer_norm(x, lp["ln3_w"], lp["ln3_b"])
+            return x + L.gelu_mlp(lp["mlp"], xn), (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(
+            layer_fn, x,
+            (params["dec_layers"], cache["k"], cache["v"], cache["ck"],
+             cache["cv"]))
+        x = L.layer_norm(x, params["dec_ln_f_w"], params["dec_ln_f_b"])
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        from repro.models.api import padded_vocab
+        vp = padded_vocab(cfg)
+        if vp != cfg.vocab_size:
+            logits = jnp.where(jnp.arange(vp) < cfg.vocab_size, logits, -1e30)
+        return logits, {"k": nk, "v": nv, "ck": cache["ck"], "cv": cache["cv"]}
+
+    raise ValueError(cfg.family)
+
+
+def prefill_audio_cross(cfg: ModelConfig, params, cache, encoder_embeds):
+    """Populate whisper cross K/V from the encoder output."""
+    enc_out = encode_audio(cfg, params, encoder_embeds)
+    B, Se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+
+    def layer_fn(_, lp):
+        ck = (enc_out @ lp["cross_attn"]["wk"]).reshape(B, Se, cfg.padded_num_kv_heads, hd)
+        cv = (enc_out @ lp["cross_attn"]["wv"]).reshape(B, Se, cfg.padded_num_kv_heads, hd)
+        return None, (ck, cv)
+
+    _, (ck, cv) = jax.lax.scan(layer_fn, None, params["dec_layers"])
+    return dict(cache, ck=ck.astype(cache["ck"].dtype),
+                cv=cv.astype(cache["cv"].dtype))

@@ -1,0 +1,373 @@
+"""Shared pure-JAX layer primitives.
+
+Everything here is a pure function over param pytrees. Attention supports the
+ChunkFlow contract: an optional *prefix KV state* (key/value tensors of earlier
+chunks of the same sequence) is consumed and the layer returns its own K/V so
+the scheduler can extend the state. Masks combine causality, packed-segment
+ids, and optional sliding windows.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig
+
+# --- activation-sharding hook -------------------------------------------
+# When set (by launch/specs.py under pjit), the leading batch dim of
+# attention intermediates is constrained to the DP mesh axes so GSPMD never
+# trades batch sharding for partial head sharding inside scan bodies; MoE and
+# SSD intermediates additionally pin their expert/head dim to the TP axis.
+_CTX = {"dp": None, "model": "model", "msize": 0, "mesh": None}
+
+
+@contextlib.contextmanager
+def batch_sharding(dp_axes, model_size: int = 0, mesh=None):
+    prev = dict(_CTX)
+    _CTX.update(dp=tuple(dp_axes) if dp_axes else None, msize=model_size,
+                mesh=mesh)
+    try:
+        yield
+    finally:
+        _CTX.update(prev)
+
+
+_U = PartitionSpec.UNCONSTRAINED
+
+
+def constrain_batch(x):
+    """Pin the batch dim to DP; leave the rest to GSPMD (UNCONSTRAINED), so
+    head/FFN sharding survives alongside."""
+    if _CTX["dp"] is None:
+        return x
+    spec = PartitionSpec(_CTX["dp"], *([_U] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_moe(x):
+    """(B, E, C, D) expert buffers: batch over DP, experts over TP (EP)."""
+    if _CTX["dp"] is None:
+        return x
+    spec = PartitionSpec(_CTX["dp"], _CTX["model"], *([_U] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_dim(x, dim: int, dim_size: int):
+    """Pin tensor dim to the TP axis (used for SSD head dims), batch to DP."""
+    if _CTX["dp"] is None:
+        return x
+    spec = [_U] * x.ndim
+    spec[0] = _CTX["dp"]
+    if _CTX["msize"] and dim_size % _CTX["msize"] == 0:
+        spec[dim] = _CTX["model"]
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+def dense_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms ----
+def rms_norm(x, weight, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE ----
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, T, H, D); positions: (B, T) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, T, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float):
+    """Qwen2-VL M-RoPE. x: (B, T, H, D); positions3: (B, T, 3) — (t, h, w)
+    components. Each rotary frequency slot is driven by one of the three
+    position streams according to ``sections`` (sums to D/2)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=d // 2)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                     # (B, T, 3)
+        jnp.broadcast_to(sec_id, positions3.shape[:2] + (d // 2,)).astype(jnp.int32),
+        axis=-1,
+    )                                                       # (B, T, D/2)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ----
+NEG_INF = -1e30
+
+
+def make_attention_mask(q_pos, k_pos, q_seg, k_seg, *, causal=True, window=None):
+    """Bool mask (B, Tq, Tk): True = attend.
+
+    q_pos/k_pos: (B, T) global positions; q_seg/k_seg: (B, T) segment ids
+    (0 = padding, never attended/attending). ``window`` may be a traced scalar
+    (per-layer local/global alternation) — use BIG_WINDOW-style sentinels for
+    global layers rather than None when traced.
+    """
+    same_seg = (q_seg[:, :, None] == k_seg[:, None, :])
+    valid = (q_seg[:, :, None] > 0) & (k_seg[:, None, :] > 0)
+    mask = same_seg & valid
+    if causal:
+        mask &= q_pos[:, :, None] >= k_pos[:, None, :]
+    if window is not None:
+        mask &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    return mask
+
+
+def sdpa(q, k, v, mask, *, attn_softcap: float = 0.0):
+    """q: (B,Tq,Hq,D)  k,v: (B,Tk,Hkv,D)  mask: (B,Tq,Tk) -> (B,Tq,Hq,D)."""
+    B, Tq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Tq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    if attn_softcap:
+        scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Tq, Hq, D).astype(q.dtype)
+
+
+def blockwise_sdpa(q, k, v, mask_fn, *, q_block: int, kv_block: int,
+                   attn_softcap: float = 0.0, kv_limits=None):
+    """Flash-style online-softmax attention in pure JAX (q blocks outer,
+    inner scan over kv blocks). Never materialises the (Tq, Tk) score matrix —
+    this is the memory-safe path for 32K+ sequences on any backend.
+
+    mask_fn(q_idx, k_idx) -> bool (B, q_block, kv_block); q_idx/k_idx are the
+    *global token offsets* of the blocks.
+
+    kv_limits: optional static per-q-block kv-block counts (causal triangle
+    skipping — §Perf: halves attention FLOPs and KV HBM re-reads). When given,
+    the q loop is unrolled so each inner scan has its own static length;
+    otherwise a uniform (nq, nk) double scan is emitted.
+    """
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nq, nk = Tq // q_block, Tk // kv_block
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    qr = q.reshape(B, nq, q_block, Hkv, G, D)
+    kr = k.reshape(B, nk, kv_block, Hkv, D)
+    vr = v.reshape(B, nk, kv_block, Hkv, D)
+
+    def q_step(qi, limit):
+        qb = qr[:, qi].astype(jnp.float32)                  # (B,qb,Hkv,G,D)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = kr[:, ki].astype(jnp.float32)
+            vb = vr[:, ki].astype(jnp.float32)
+            s = constrain_batch(
+                jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale)
+            if attn_softcap:
+                s = attn_softcap * jnp.tanh(s / attn_softcap)
+            blk_mask = mask_fn(qi * q_block, ki * kv_block)  # (B,qb,kb)
+            s = jnp.where(blk_mask[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb)
+            return (m_new, l_new, acc_new), None
+
+        m0 = constrain_batch(jnp.full((B, Hkv, G, q_block), NEG_INF, jnp.float32))
+        l0 = constrain_batch(jnp.zeros((B, Hkv, G, q_block), jnp.float32))
+        a0 = constrain_batch(jnp.zeros((B, Hkv, G, q_block, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(limit))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]         # (B,Hkv,G,qb,D)
+        return out.transpose(0, 3, 1, 2, 4)                  # (B,qb,Hkv,G,D)
+
+    if kv_limits is not None:
+        outs = [q_step(qi, int(kv_limits[qi])) for qi in range(nq)]
+        out = jnp.concatenate(outs, axis=1).reshape(B, Tq, Hq, D)
+        return out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(lambda _, qi: (None, q_step(qi, nk)), None,
+                           jnp.arange(nq))                   # (nq,B,qb,...)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, Hq, D)
+    return out.astype(q.dtype)
+
+
+@dataclasses.dataclass
+class AttnParams:
+    """Just a naming convention — attention params are dicts:
+    {wq, wk, wv, wo, (bq, bk, bv)}."""
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.padded_num_heads * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.padded_num_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.padded_num_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.padded_num_heads * hd, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.padded_num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.padded_num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.padded_num_kv_heads * hd,), dtype)
+    return p
+
+
+def attention_layer(p, x, cfg: ModelConfig, *, positions, segment_ids,
+                    prefix=None, window=None, blockwise_threshold=8192,
+                    cross_kv=None):
+    """Returns (out, new_kv) where new_kv = {"k","v"} of THIS chunk (for the
+    ChunkFlow state store).
+
+    prefix: optional {"k","v","pos","seg"} of earlier chunks — prepended to
+    this chunk's K/V (the paper's StateStore read path).
+    cross_kv: optional {"k","v","seg"} for encoder-decoder cross attention
+    (used instead of self-attention K/V; no causal mask).
+    """
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, T, cfg.padded_num_heads, hd)
+
+    if cross_kv is not None:
+        k, v = cross_kv["k"], cross_kv["v"]
+        mask = make_attention_mask(
+            jnp.zeros_like(segment_ids), jnp.zeros_like(cross_kv["seg"]),
+            segment_ids, cross_kv["seg"], causal=False)
+        out = sdpa(q, k, v, mask, attn_softcap=cfg.attn_softcap)
+        out = out.reshape(B, T, cfg.padded_num_heads * hd) @ p["wo"]
+        return out, None
+
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, T, cfg.padded_num_kv_heads, hd)
+    v = v.reshape(B, T, cfg.padded_num_kv_heads, hd)
+
+    if cfg.rope_theta:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+            pos1d = positions[..., 0]
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            pos1d = positions
+    else:
+        pos1d = positions if positions.ndim == 2 else positions[..., 0]
+
+    new_kv = {"k": k, "v": v}
+
+    if prefix is not None:
+        k_all = jnp.concatenate([prefix["k"], k], axis=1)
+        v_all = jnp.concatenate([prefix["v"], v], axis=1)
+        k_pos = jnp.concatenate([prefix["pos"], pos1d], axis=1)
+        k_seg = jnp.concatenate([prefix["seg"], segment_ids], axis=1)
+    else:
+        k_all, v_all, k_pos, k_seg = k, v, pos1d, segment_ids
+
+    Tk = k_all.shape[1]
+    if cfg.attn_backend == "pallas_interpret" and window is None:
+        from repro.kernels import ops
+        out = ops.chunk_attention(
+            q, k_all, v_all, pos1d, k_pos, segment_ids, k_seg,
+            softcap=cfg.attn_softcap, block_q=min(128, T),
+            block_k=min(128, Tk), interpret=True)
+    elif max(T, Tk) <= blockwise_threshold:
+        mask = make_attention_mask(pos1d, k_pos, segment_ids, k_seg,
+                                   causal=True, window=window)
+        out = sdpa(q, k_all, v_all, mask, attn_softcap=cfg.attn_softcap)
+    else:
+        qb = min(1024, T)
+        kb = min(1024, Tk)
+
+        def mask_fn(qi, ki):
+            qp = jax.lax.dynamic_slice_in_dim(pos1d, qi, qb, 1)
+            qs = jax.lax.dynamic_slice_in_dim(segment_ids, qi, qb, 1)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, ki, kb, 1)
+            ks_ = jax.lax.dynamic_slice_in_dim(k_seg, ki, kb, 1)
+            return make_attention_mask(qp, kp, qs, ks_, causal=True, window=window)
+
+        # causal triangle skipping: q block qi never attends past global
+        # position P + (qi+1)*qb, so later kv blocks are statically dead
+        P = k_all.shape[1] - T
+        nk = Tk // kb
+        kv_limits = [min(nk, -(-(P + (qi + 1) * qb) // kb))
+                     for qi in range(T // qb)]
+        out = blockwise_sdpa(q, k_all, v_all, mask_fn, q_block=qb, kv_block=kb,
+                             attn_softcap=cfg.attn_softcap,
+                             kv_limits=kv_limits)
+
+    out = out.reshape(B, T, cfg.padded_num_heads * hd) @ p["wo"]
+    return out, new_kv
+
+
+# -------------------------------------------------------------------- MLP ---
+def init_mlp(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def swiglu_mlp(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    return jax.nn.gelu((x @ p["w_in"]) + p["b_in"]) @ p["w_out"] + p["b_out"]
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x

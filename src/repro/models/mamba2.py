@@ -1,0 +1,233 @@
+"""Mamba-2 / SSD (state-space duality) block in pure JAX [arXiv:2405.21060].
+
+The SSD chunked algorithm is a natural fit for ChunkFlow: the inter-chunk
+recurrent state (B_heads, head_dim, d_state) *is* the chunk state the paper's
+StateStore carries — O(1) in sequence length, so the memory claim is even
+stronger than for attention (DESIGN.md §4).
+
+Layout: x (B, T, D) -> in_proj -> [z, xc, B, C, dt]; depthwise causal conv on
+(xc|B|C); SSD scan over heads; gated RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    DI = cfg.d_inner
+    H = cfg.ssm_heads
+    S = cfg.ssm_state
+    G = 1  # single B/C group
+    conv_dim = DI + 2 * G * S
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * DI + 2 * G * S + H), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_dim), scale=0.1,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),              # A = -exp(A_log)
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),                   # skip connection
+        "norm_w": jnp.zeros((DI,), dtype),
+        "out_proj": dense_init(ks[2], (DI, D), dtype=dtype),
+    }
+
+
+def _ssd_chunk_scan(xh, dt, A, Bm, Cm, chunk: int, init_state=None,
+                    segments=None):
+    """Chunked SSD scan (Mamba-2 Alg. 1 'SSD-minimal').
+
+    xh: (B, T, H, P) values; dt: (B, T, H) softplus'd step; A: (H,) negative;
+    Bm/Cm: (B, T, S) input/output projections (single group broadcast to H).
+    segments: optional (B, T) int32 packed-segment ids — the recurrent state
+    resets at segment boundaries (packed rows must be *contiguous* runs).
+    Returns (y (B,T,H,P), final_state (B,H,P,S)).
+    """
+    Bsz, T, H, P = xh.shape
+    S = Bm.shape[-1]
+    nc = T // chunk
+    xc = xh.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, S)
+    Cc = Cm.reshape(Bsz, nc, chunk, S)
+
+    from repro.models.layers import constrain_dim
+    xc = constrain_dim(xc, 3, H)
+    dtc = constrain_dim(dtc, 3, H)
+
+    dA = dtc * A                                            # (B,nc,l,H)
+    dA_cum = constrain_dim(jnp.cumsum(dA, axis=2), 3, H)    # within-chunk cumsum
+
+    if segments is not None:
+        segc = segments.reshape(Bsz, nc, chunk)
+        same_ij = segc[:, :, :, None] == segc[:, :, None, :]        # (B,nc,i,j)
+        to_last = (segc == segc[:, :, -1:])                         # (B,nc,l)
+        prev_last = jnp.concatenate([segc[:, :1, 0], segc[:, :-1, -1]],
+                                    axis=1)                         # (B,nc)
+        from_prev = (segc == prev_last[:, :, None])                 # (B,nc,l)
+        carry_ok = (segc[:, :, -1] == prev_last)                    # (B,nc)
+    else:
+        same_ij = to_last = from_prev = carry_ok = None
+
+    # --- intra-chunk (quadratic within the chunk, causal) -------------------
+    # L[b,c,h,i,j] = exp(dA_cum[i] - dA_cum[j]) for i >= j
+    # NOTE: einsums are kept strictly pairwise with explicit elementwise
+    # pre-multiplies — 4-operand einsums decompose into huge broadcast
+    # intermediates ((B,nc,l,H,P,S)-sized) under XLA.
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]   # (B,nc,i,j,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    L = constrain_dim(L, 4, H)
+    if same_ij is not None:
+        L = L * same_ij[..., None]
+    CB = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)              # (B,nc,i,j)
+    Lw = constrain_dim(CB[..., None] * L, 4, H)             # (B,nc,i,j,H)
+    xw = constrain_dim(dtc[..., None] * xc, 3, H)           # (B,nc,j,H,P)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", Lw, xw)
+    y_intra = constrain_dim(y_intra, 3, H)
+
+    # --- chunk states --------------------------------------------------------
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (B,nc,l,H)
+    if to_last is not None:
+        decay_to_end = decay_to_end * to_last[..., None]
+    xw_states = constrain_dim((decay_to_end * dtc)[..., None] * xc, 3, H)
+    states = jnp.einsum("bcls,bclhp->bchps", Bc, xw_states)  # (B,nc,H,P,S)
+    states = constrain_dim(states, 2, H)
+
+    # --- inter-chunk recurrence over chunk states ----------------------------
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # (B,nc,H)
+    if carry_ok is not None:
+        chunk_decay = chunk_decay * carry_ok[..., None]
+
+    def step(carry, inp):
+        s_prev = carry
+        st, dec = inp
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    s0 = (jnp.zeros((Bsz, H, P, S), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,nc,H,P,S)
+
+    # --- inter-chunk output contribution -------------------------------------
+    state_decay = jnp.exp(dA_cum)                           # decay from chunk start
+    if from_prev is not None:
+        state_decay = state_decay * from_prev[..., None]
+    y_inter = jnp.einsum("bcls,bchps->bclhp", Cc, prev_states)
+    y_inter = constrain_dim(y_inter, 3, H) * state_decay[..., None]
+    y = constrain_dim((y_intra + y_inter), 3, H).reshape(Bsz, T, H, P)
+    return y, final
+
+
+def mamba_layer(p, x, cfg: ModelConfig, *, state=None, segment_ids=None):
+    """x: (B, T, D) -> (out, new_state {"ssm": (B,H,P,S), "conv": (B,W-1,CD)}).
+
+    ``state`` is the ChunkFlow chunk state: SSD state + conv tail of the
+    previous chunk of the same sequence.
+    """
+    B, T, D = x.shape
+    DI, H, S = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    P = cfg.ssm_head_dim
+    W = cfg.ssm_conv_width
+    G = 1
+
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :DI]
+    xbc = zxbcdt[..., DI: 2 * DI + 2 * G * S]
+    dt_raw = zxbcdt[..., 2 * DI + 2 * G * S:]
+
+    # depthwise causal conv over (x|B|C) with carry-in tail
+    if state is not None:
+        tail = state["conv"].astype(xbc.dtype)
+    else:
+        tail = jnp.zeros((B, W - 1, xbc.shape[-1]), xbc.dtype)
+    xbc_pad = jnp.concatenate([tail, xbc], axis=1)
+    conv = sum(xbc_pad[:, i: i + T] * p["conv_w"][i] for i in range(W))
+    xbc = jax.nn.silu(conv + p["conv_b"])
+    new_conv_tail = xbc_pad[:, -(W - 1):]
+
+    xc = xbc[..., :DI].reshape(B, T, H, P)
+    Bm = xbc[..., DI: DI + S]
+    Cm = xbc[..., DI + S:]
+
+    A = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    chunk = min(cfg.ssm_chunk, T)
+    # pad T to a multiple of chunk
+    pad = (-T) % chunk
+    seg = segment_ids
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        if seg is not None:
+            seg = jnp.pad(seg, ((0, 0), (0, pad)))
+
+    init = state["ssm"] if state is not None else None
+    y, final = _ssd_chunk_scan(xc.astype(jnp.float32), dt, A,
+                               Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                               chunk, init_state=init, segments=seg)
+    y = y[:, :T]
+    y = y + xc.astype(jnp.float32)[:, :T] * p["D"][None, None, :, None]
+    y = y.reshape(B, T, DI).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"ssm": final, "conv": new_conv_tail}
+
+
+def mamba_decode_step(p, x, cfg: ModelConfig, state):
+    """Single-token recurrent update. x: (B, 1, D)."""
+    B, _, D = x.shape
+    DI, H, S, P, W = (cfg.d_inner, cfg.ssm_heads, cfg.ssm_state,
+                      cfg.ssm_head_dim, cfg.ssm_conv_width)
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z = zxbcdt[..., :DI]
+    xbc = zxbcdt[..., DI: 2 * DI + 2 * S]
+    dt_raw = zxbcdt[..., 2 * DI + 2 * S:]
+
+    conv_buf = jnp.concatenate([state["conv"].astype(xbc.dtype),
+                                xbc[:, None, :]], axis=1)   # (B, W, CD)
+    conv = sum(conv_buf[:, i] * p["conv_w"][i] for i in range(W))
+    xbc = jax.nn.silu(conv + p["conv_b"])
+    new_conv = conv_buf[:, 1:]
+
+    xc = xbc[..., :DI].reshape(B, H, P)
+    Bm = xbc[..., DI: DI + S]
+    Cm = xbc[..., DI + S:]
+    A = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+
+    dA = jnp.exp(dt * A)                                    # (B, H)
+    s = state["ssm"].astype(jnp.float32)
+    s = s * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bs->bhps", dt, xc.astype(jnp.float32), Bm.astype(jnp.float32))
+    y = jnp.einsum("bhps,bs->bhp", s, Cm.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, DI).astype(x.dtype)
+    y = rms_norm((y * jax.nn.silu(z))[:, None, :], p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"ssm": s, "conv": new_conv}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    G = 1
+    conv_dim = cfg.d_inner + 2 * G * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.float32),
+    }

@@ -1,0 +1,91 @@
+"""Top-k MoE with sort-free scatter dispatch.
+
+TPU adaptation: instead of the GShard dispatch einsum (whose (B,T,E,C) tensors
+explode for E=384) we rank tokens within each expert via a one-hot cumsum and
+scatter them into per-row (E, C, D) buffers. Expert matmuls are plain einsums
+whose HLO FLOP count equals the *active-parameter* cost (top-k × FFN), keeping
+the roofline analysis honest. The expert dimension shards over the "model"
+mesh axis (expert parallelism); GSPMD inserts the token all-to-alls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": dense_init(ks[0], (D, E), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (E, D, F), dtype=dtype),
+        "w_up": dense_init(ks[2], (E, D, F), dtype=dtype),
+        "w_down": dense_init(ks[3], (E, F, D), dtype=dtype),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_row: int) -> int:
+    c = int(tokens_per_row * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.num_experts) + 1
+    return max(c, cfg.experts_per_token)
+
+
+def moe_layer(p, x, cfg: ModelConfig):
+    """x: (B, T, D) -> (out (B, T, D), aux_loss scalar).
+
+    Dispatch is per batch row (per-row capacity) so the ranking cumsum never
+    crosses the data-parallel sharding boundary. Under an active mesh context
+    (launch/specs.py) with a divisible expert count, dispatch switches to the
+    shard_map EP-local path (moe_a2a.py) — measured 2.4 TB/step less dispatch
+    traffic on kimi-1t (§Perf).
+    """
+    ctx = L._CTX
+    if (ctx.get("mesh") is not None and ctx["msize"]
+            and cfg.num_experts % ctx["msize"] == 0):
+        from repro.models.moe_a2a import moe_layer_eplocal
+        return moe_layer_eplocal(p, x, cfg, ctx["mesh"], ctx["dp"])
+    B, T, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = moe_capacity(cfg, T)
+
+    logits = x.astype(jnp.float32) @ p["router"]            # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                    # (B, T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch-style): E * sum(frac_tokens * frac_probs).
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=(0, 1))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # --- rank each (token, k) pick within its expert ------------------------
+    flat_idx = idx.reshape(B, T * K)                        # (B, N)
+    oh = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)       # (B, N, E)
+    pos_in_e = (jnp.cumsum(oh, axis=1) * oh).sum(-1) - 1    # (B, N)
+    keep = pos_in_e < C                                     # capacity drop
+    pos_clip = jnp.minimum(pos_in_e, C - 1)
+
+    # --- scatter tokens into (B, E, C, D) buffers (E shards over "model") ---
+    x_rep = jnp.repeat(x, K, axis=1) * keep[..., None].astype(x.dtype)
+    buf = L.constrain_moe(jnp.zeros((B, E, C, D), x.dtype))
+    buf = jax.vmap(lambda b, e, c, v: b.at[e, c].add(v))(
+        buf, flat_idx, pos_clip, x_rep)
+    expert_in = L.constrain_moe(buf)
+
+    # --- expert FFN (SwiGLU) -------------------------------------------------
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, p["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", expert_in, p["w_up"])
+    out_e = jnp.einsum("becf,efd->becd", h, p["w_down"])    # (B, E, C, D)
+    out_e = L.constrain_moe(out_e)
+
+    # --- gather back & combine ----------------------------------------------
+    picked = jax.vmap(lambda o, e, c: o[e, c])(out_e, flat_idx, pos_clip)
+    picked = picked * (gates.reshape(B, T * K, 1).astype(picked.dtype)
+                       * keep[..., None])
+    out = picked.reshape(B, T, K, D).sum(axis=2)
+    return out, aux

@@ -1,0 +1,89 @@
+"""Expert-parallel MoE dispatch via shard_map (§Perf kimi iteration).
+
+The pjit/GSPMD scatter dispatch in moe.py round-trips token buffers through
+all-gathers over the TP axis and an all-reduce combine — measured 4.6 TB/step
+on kimi-1t train. But between transformer blocks the activations are already
+*replicated* across the TP axis (Megatron layout), so no token movement is
+needed at all: each shard locally selects the (token, k) assignments routed
+to ITS E/msz experts, computes them, and one all-reduce (the irreducible
+combine, which GSPMD also paid) merges the partial outputs.
+
+Net: the dispatch all-gathers disappear; traffic drops to exactly one
+(B, T, D) all-reduce per MoE layer.
+
+Numerics match moe.moe_layer under the same per-expert capacity policy;
+tests/test_moe_a2a.py checks against the dense reference on a real mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import moe_capacity
+
+
+def _rank_in_group(group_ids, n_groups):
+    oh = jax.nn.one_hot(group_ids, n_groups, dtype=jnp.int32)
+    return (jnp.cumsum(oh, axis=0) * oh).sum(-1) - 1
+
+
+def moe_layer_eplocal(p, x, cfg: ModelConfig, mesh, dp, axis: str = "model"):
+    """x: (B, T, D) -> (out, aux). Requires cfg.num_experts % msz == 0 and
+    TP-replicated activations (the Megatron layout this repo uses)."""
+    msz = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    E, K, D = cfg.num_experts, cfg.experts_per_token, cfg.d_model
+    assert E % msz == 0, (E, msz)
+    E_loc = E // msz
+    B, T, _ = x.shape
+    C = moe_capacity(cfg, T)
+
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    def body(wg, wu, wd, x_loc, idx_loc, gates_loc):
+        r = jax.lax.axis_index(axis)
+        b_loc, t, _ = x_loc.shape
+        n = b_loc * t * K
+        flat_e = idx_loc.reshape(n)
+        mine = (flat_e // E_loc) == r
+        eid = jnp.where(mine, flat_e % E_loc, E_loc)          # overflow bucket
+        # per-(row-local-)expert capacity ranking, matching moe.moe_layer's
+        # per-row capacity C (ranking is per batch row)
+        eid_rows = eid.reshape(b_loc, t * K)
+        pos = jax.vmap(lambda e: _rank_in_group(e, E_loc + 1))(eid_rows)
+        keep = (pos < C) & (eid_rows < E_loc)
+        pc = jnp.minimum(pos, C - 1)
+        e2 = jnp.minimum(eid_rows, E_loc - 1)
+
+        xrep = jnp.repeat(x_loc, K, axis=1)                   # (b, t*K, D)
+        buf = jnp.zeros((b_loc, E_loc, C, D), x_loc.dtype)
+        buf = jax.vmap(lambda b, e, c, v: b.at[e, c].add(v))(
+            buf, e2, pc, xrep * keep[..., None].astype(x_loc.dtype))
+
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, wg))
+        h = h * jnp.einsum("becd,edf->becf", buf, wu)
+        y = jnp.einsum("becf,efd->becd", h, wd)               # (b,E_loc,C,D)
+
+        picked = jax.vmap(lambda o, e, c: o[e, c])(y, e2, pc)
+        picked = picked * (gates_loc.reshape(b_loc, t * K, 1)
+                           .astype(picked.dtype) * keep[..., None])
+        out = picked.reshape(b_loc, t, K, D).sum(axis=2)
+        return jax.lax.psum(out, axis)                        # the combine
+
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None),
+                  P(axis, None, None), P(dp, None, None),
+                  P(dp, None, None), P(dp, None, None)),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )(p["w_gate"], p["w_up"], p["w_down"], x, idx.astype(jnp.int32), gates)
+    return out, aux

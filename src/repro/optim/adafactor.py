@@ -1,0 +1,61 @@
+"""Adafactor (factored second moment) — the optimizer this repo uses for the
+>=398B archs where AdamW's fp32 m/v cannot fit a v5e pod (DESIGN.md §6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"slots": jax.tree.map(init, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, opt_state, *, lr, decay=0.8,
+                     eps=1e-30, clip_threshold=1.0):
+    step = opt_state["step"] + 1
+    beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+    def upd_slice(p, g, slot):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            vr = beta * slot["vr"] + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * slot["vc"] + (1 - beta) * g2.mean(axis=-2)
+            denom = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                     )[..., None] * vc[..., None, :]
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta * slot["v"] + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+            new_slot = {"v": v}
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_slot
+
+    def upd(p, g, slot):
+        # layer-stacked tensors: per-layer slices keep fp32 temporaries small
+        # (update-RMS clipping becomes per-layer — noted in DESIGN.md)
+        if p.ndim >= 3 and p.shape[0] > 1:
+            return jax.lax.map(lambda a: upd_slice(a[0], a[1], a[2]),
+                               (p, g, slot))
+        return upd_slice(p, g, slot)
+
+    leaves, tdef = jax.tree.flatten(params)
+    gl = jax.tree.leaves(grads)
+    sl = tdef.flatten_up_to(opt_state["slots"])
+    out = [upd(p, g, s) for p, g, s in zip(leaves, gl, sl)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            {"slots": jax.tree.unflatten(tdef, [o[1] for o in out]),
+             "step": step})

@@ -1,0 +1,93 @@
+"""Algorithm 1 (chunk construction) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunking import (construct_chunks, group_chunks,
+                                 materialize_chunk)
+
+
+def test_paper_figure4_example():
+    """16 sequences, one long (split into 4), shorts packed into 3 chunks."""
+    C = 8
+    lengths = {6: 4 * C}                       # the long sequence
+    rng = np.random.RandomState(0)
+    short_total = 0
+    for i in range(15):
+        sid = i if i < 6 else i + 1
+        lengths[sid] = int(rng.randint(1, C))
+        short_total += lengths[sid]
+    chunks = construct_chunks(lengths, C)
+    groups, standalone = group_chunks(chunks)
+    assert list(groups) == [6]
+    assert len(groups[6]) == 4
+    assert all(c.tokens_used == C for c in groups[6])
+    lo = -(-short_total // C)
+    assert len(standalone) >= lo               # minimal-ish bin count
+    assert len(standalone) <= lo + 1
+
+
+@given(st.lists(st.integers(1, 300), min_size=1, max_size=40),
+       st.integers(4, 64))
+@settings(max_examples=200, deadline=None)
+def test_chunk_construction_properties(lens, chunk_size):
+    lengths = {i: l for i, l in enumerate(lens)}
+    chunks = construct_chunks(lengths, chunk_size)
+    # no chunk exceeds ChunkSize
+    assert all(c.tokens_used <= chunk_size for c in chunks)
+    # every token of every sequence appears exactly once, in order
+    seen = {i: [] for i in lengths}
+    for c in chunks:
+        for it in c.items:
+            seen[it.seq_id].append((it.start, it.length))
+    for sid, l in lengths.items():
+        parts = sorted(seen[sid])
+        assert parts[0][0] == 0
+        assert sum(p[1] for p in parts) == l
+        off = 0
+        for s, ln in parts:
+            assert s == off
+            off += ln
+    # dependent groups: ascending contiguous indexes, full chunks except last
+    groups, standalone = group_chunks(chunks)
+    for sid, g in groups.items():
+        assert lengths[sid] > chunk_size
+        assert [c.index_in_group for c in g] == list(range(len(g)))
+        assert all(c.tokens_used == chunk_size for c in g[:-1])
+    # bin count lower bound is respected within +1 (FFD guarantee style)
+    short_total = sum(l for l in lens if l <= chunk_size)
+    if short_total:
+        lo = -(-short_total // chunk_size)
+        assert len(standalone) >= lo
+
+
+def test_materialize_labels_cross_chunk_boundary():
+    """A dependent chunk's last token must be supervised by the next chunk's
+    first token (no boundary loss dropped)."""
+    seq = np.arange(100, 100 + 20, dtype=np.int32)
+    chunks = construct_chunks({0: 20}, 8)
+    groups, _ = group_chunks(chunks)
+    mats = [materialize_chunk(c, {0: seq}) for c in groups[0]]
+    assert mats[0]["labels"][0, 7] == seq[8]
+    assert mats[0]["loss_mask"][0, 7] == 1.0
+    assert mats[1]["labels"][0, 7] == seq[16]
+    # final token of the sequence has no label
+    assert mats[2]["loss_mask"][0, 3] == 0.0
+    assert (mats[2]["segment_ids"][0, 4:] == 0).all()   # padding
+    # positions are global within the sequence
+    assert (mats[1]["positions"][0, :8] == np.arange(8, 16)).all()
+
+
+def test_materialize_packed_standalone():
+    seqs = {0: np.arange(5, dtype=np.int32), 1: np.arange(50, 53, dtype=np.int32)}
+    chunks = construct_chunks({0: 5, 1: 3}, 16)
+    assert len(chunks) == 1
+    m = materialize_chunk(chunks[0], seqs)
+    seg = m["segment_ids"][0]
+    assert set(seg.tolist()) == {0, 1, 2}
+    # per-segment positions restart
+    for sid in (1, 2):
+        idx = np.where(seg == sid)[0]
+        assert (m["positions"][0, idx] == np.arange(len(idx))).all()
+        # last token of each segment is not supervised
+        assert m["loss_mask"][0, idx[-1]] == 0.0

@@ -1,0 +1,79 @@
+"""Loop-aware HLO analyzer: exact trip-count recovery on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _compile_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_exact():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y.sum()
+
+    x = jnp.zeros((64, 64))
+    w = jnp.zeros((64, 64))
+    r = analyze(_compile_text(f, x, w))
+    assert abs(r["flops"] / (2 * 64 ** 3 * 7) - 1) < 0.05
+
+
+def test_nested_scan_multiplies():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y.sum()
+
+    x = jnp.zeros((64, 64))
+    w = jnp.zeros((64, 64))
+    r = analyze(_compile_text(g, x, w))
+    assert abs(r["flops"] / (2 * 64 ** 3 * 15) - 1) < 0.05
+
+
+def test_grad_of_scan_triples_flops():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y.sum()
+
+    x = jnp.zeros((64, 64))
+    w = jnp.zeros((64, 64))
+    r = analyze(_compile_text(jax.grad(f, argnums=1), x, w))
+    assert abs(r["flops"] / (3 * 2 * 64 ** 3 * 7) - 1) < 0.05
+
+
+def test_gqa_einsum_flops():
+    """Batched einsum with contraction (GQA attention style)."""
+    def f(q, k):
+        return jnp.einsum("bqhgd,bkhd->bhgqk", q, k).sum()
+
+    q = jnp.zeros((2, 32, 4, 2, 16))
+    k = jnp.zeros((2, 48, 4, 16))
+    r = analyze(_compile_text(f, q, k))
+    expect = 2 * 2 * 4 * 2 * 32 * 48 * 16
+    assert abs(r["flops"] / expect - 1) < 0.05
+
+
+def test_tuple_typed_ops_parse():
+    """HLO lines with tuple types containing /*index=N*/ comments parse."""
+    def f(x):
+        def body(carry, _):
+            a, b, c, d, e, ff = carry
+            return (a @ ff, b + 1, c, d, e, ff), None
+        init = (x, x, x, x, x, x)
+        (a, *_), _ = jax.lax.scan(body, init, None, length=4)
+        return a.sum()
+
+    x = jnp.zeros((32, 32))
+    r = analyze(_compile_text(f, x))
+    assert abs(r["flops"] / (2 * 32 ** 3 * 4) - 1) < 0.05

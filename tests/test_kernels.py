@@ -1,0 +1,194 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.chunked_attention import chunked_prefix_attention
+from repro.kernels.decode_attention import decode_attention
+
+
+def rand_attn(key, B, T, P, Hq, Hkv, D, dtype, packed=False):
+    ks = jax.random.split(key, 5)
+    S = P + T
+    q = jax.random.normal(ks[0], (B, Hq, T, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32).astype(dtype)
+    if packed:
+        # two segments per row splitting T at a random-ish point; no prefix
+        assert P == 0
+        split = T // 3
+        q_seg = jnp.where(jnp.arange(T) < split, 1, 2)[None].repeat(B, 0)
+        q_pos = jnp.where(jnp.arange(T) < split, jnp.arange(T),
+                          jnp.arange(T) - split)[None].repeat(B, 0)
+        k_seg, k_pos = q_seg, q_pos
+    else:
+        q_pos = (P + jnp.arange(T))[None].repeat(B, 0)
+        q_seg = jnp.ones((B, T), jnp.int32)
+        k_pos = jnp.arange(S)[None].repeat(B, 0)
+        k_seg = jnp.ones((B, S), jnp.int32)
+    return q, k, v, q_pos, k_pos, q_seg, k_seg
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,P,Hq,Hkv,D", [
+    (1, 128, 0, 4, 2, 64),        # no prefix (standalone chunk)
+    (2, 128, 128, 4, 4, 64),      # MHA with one-chunk prefix
+    (1, 256, 128, 8, 2, 128),     # GQA, longer chunk
+    (1, 128, 384, 4, 1, 128),     # deep prefix (chunk 4 of a long seq)
+])
+def test_chunked_prefix_attention_matches_ref(dtype, B, T, P, Hq, Hkv, D):
+    args = rand_attn(jax.random.PRNGKey(0), B, T, P, Hq, Hkv, D, dtype)
+    out = chunked_prefix_attention(*args, interpret=True)
+    expect = ref.chunked_prefix_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOL[dtype])
+
+
+def test_chunked_attention_packed_segments():
+    args = rand_attn(jax.random.PRNGKey(1), 2, 128, 0, 4, 2, 64,
+                     jnp.float32, packed=True)
+    out = chunked_prefix_attention(*args, interpret=True)
+    expect = ref.chunked_prefix_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (96, 0.0), (0, 50.0),
+                                            (64, 30.0)])
+def test_chunked_attention_window_softcap(window, softcap):
+    args = rand_attn(jax.random.PRNGKey(2), 1, 128, 128, 4, 2, 64, jnp.float32)
+    out = chunked_prefix_attention(*args, window=window, softcap=softcap,
+                                   interpret=True)
+    expect = ref.chunked_prefix_attention_ref(*args, window=window,
+                                              softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ops_wrapper_pads_and_matches_layers_layout():
+    """The (B,T,H,D) wrapper with non-block-aligned T/S."""
+    B, T, P, Hq, Hkv, D = 2, 100, 60, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, D))
+    k = jax.random.normal(ks[1], (B, P + T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, P + T, Hkv, D))
+    q_pos = (P + jnp.arange(T))[None].repeat(B, 0)
+    k_pos = jnp.arange(P + T)[None].repeat(B, 0)
+    q_seg = jnp.ones((B, T), jnp.int32)
+    k_seg = jnp.ones((B, P + T), jnp.int32)
+    out = ops.chunk_attention(q, k, v, q_pos, k_pos, q_seg, k_seg,
+                              block_q=64, block_k=64)
+    expect = ref.chunked_prefix_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), q_pos, k_pos, q_seg, k_seg)
+    np.testing.assert_allclose(np.asarray(out.transpose(0, 2, 1, 3)),
+                               np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,clen,window", [
+    (1, 256, 4, 2, 64, 200, 0),
+    (2, 512, 8, 8, 128, 17, 0),
+    (1, 256, 4, 1, 128, 255, 0),
+    (2, 256, 4, 2, 64, 250, 128),     # sliding window decode
+])
+def test_decode_attention_matches_ref(dtype, B, S, Hq, Hkv, D, clen, window):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, Hq, 1, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32).astype(dtype)
+    out = decode_attention(q, k, v, clen, window=window, interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, clen, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOL[dtype])
+
+
+def test_kernel_equals_model_sdpa_path():
+    """Kernel output == the model's sdpa attention (same masking contract)."""
+    from repro.models import layers as L
+    B, T, P, Hq, Hkv, D = 1, 128, 128, 4, 2, 64
+    args = rand_attn(jax.random.PRNGKey(5), B, T, P, Hq, Hkv, D, jnp.float32)
+    q, k, v, q_pos, k_pos, q_seg, k_seg = args
+    out = chunked_prefix_attention(*args, interpret=True)
+    mask = L.make_attention_mask(q_pos, k_pos, q_seg, k_seg, causal=True)
+    expect = L.sdpa(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(
+        expect.transpose(0, 2, 1, 3)), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,nc,l,S,H,P", [
+    (1, 2, 128, 32, 4, 64),
+    (2, 1, 256, 64, 2, 32),
+])
+def test_ssd_intra_chunk_matches_ref(dtype, B, nc, l, S, H, P):
+    from repro.kernels.ssd_scan import ssd_intra_chunk
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    Cc = jax.random.normal(ks[0], (B, nc, l, S), jnp.float32).astype(dtype)
+    Bc = jax.random.normal(ks[1], (B, nc, l, S), jnp.float32).astype(dtype)
+    # decays: negative cumulative sums (realistic SSD magnitudes)
+    dA = -jnp.abs(jax.random.normal(ks[2], (B, nc, l, H))) * 0.05
+    dA_cum = jnp.cumsum(dA, axis=2).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, nc, l, H))).astype(dtype)
+    xc = jax.random.normal(ks[4], (B, nc, l, H, P), jnp.float32).astype(dtype)
+    out = ssd_intra_chunk(Cc, Bc, dA_cum, dt, xc, interpret=True)
+    expect = ref.ssd_intra_chunk_ref(Cc, Bc, dA_cum, dt, xc)
+    # SSD outputs are O(sqrt(l)*S)-scale sums (not convex combinations like
+    # attention), so bf16 needs a scale-relative tolerance
+    scale = float(np.abs(np.asarray(expect, np.float32)).max())
+    tol = (dict(rtol=2e-5, atol=2e-5) if dtype == jnp.float32
+           else dict(rtol=5e-2, atol=5e-2 * scale))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol)
+
+
+def test_ssd_kernel_matches_model_scan():
+    """Kernel y_intra == the model's _ssd_chunk_scan y_intra path (zero
+    initial state, single segment -> y == y_intra for the first chunk)."""
+    from repro.kernels.ssd_scan import ssd_intra_chunk
+    from repro.models.mamba2 import _ssd_chunk_scan
+    B, T, H, P, S, l = 1, 128, 2, 32, 16, 128
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    xh = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.abs(jax.random.normal(ks[2], (H,))) * 0.1
+    Bm = jax.random.normal(ks[3], (B, T, S))
+    Cm = jax.random.normal(jax.random.PRNGKey(9), (B, T, S))
+    y_model, _ = _ssd_chunk_scan(xh, dt, A, Bm, Cm, chunk=l)
+    dA_cum = jnp.cumsum(dt * A, axis=1).reshape(B, 1, l, H)
+    y_kernel = ssd_intra_chunk(Cm.reshape(B, 1, l, S), Bm.reshape(B, 1, l, S),
+                               dA_cum, dt.reshape(B, 1, l, H),
+                               xh.reshape(B, 1, l, H, P), interpret=True)
+    np.testing.assert_allclose(np.asarray(y_kernel[:, 0]),
+                               np.asarray(y_model), rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_backend_matches_xla_in_model():
+    """cfg.attn_backend='pallas_interpret' plugs the kernel into the full
+    model forward; logits must match the XLA path."""
+    import dataclasses
+    from repro.configs.base import ModelConfig
+    from repro.models import api
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=97, dtype="float32", rope_theta=10_000.0)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 48), 1,
+                                          cfg.vocab_size)}
+    ref_logits, ref_state, _ = api.forward(cfg, params, batch)
+    cfgp = dataclasses.replace(cfg, attn_backend="pallas_interpret")
+    out_logits, out_state, _ = api.forward(cfgp, params, batch)
+    np.testing.assert_allclose(np.asarray(out_logits),
+                               np.asarray(ref_logits), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(out_state["k"]),
+                               np.asarray(ref_state["k"]), rtol=2e-5,
+                               atol=2e-5)

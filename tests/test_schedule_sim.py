@@ -1,0 +1,105 @@
+"""Pipeline-schedule simulator vs the paper's OWN numbers (Figs. 2, 6, 7).
+
+Reproduced exactly:
+  * equal-length 4-microbatch 1F1B, P=4      -> 42.86%  (paper: "42.8%")
+  * Fig. 2  variable [4,2,1,1]               -> 57.14%  (paper: 57.14%)
+  * Fig. 7  ChunkSize=4*Unit, 2 chunks       -> 60.00%  (paper: 60%)
+  * Fig. 6  state-aware, paper-K=2           -> 47.83%  (paper: 47.8%)
+  * improvements: paper-K=1 -> 7.7% ("approximately 8%"), K=1->K=2 -> 11.5%
+    ("12%")
+
+K-convention note (EXPERIMENTS.md §Dry-run): the paper's pipeline figures use
+K counting the *in-flight* chunk's activation slot, so paper-K corresponds to
+sim-k = paper-K - 1 in `chunks_to_microbatches`. Fig. 6(a) (paper-K=1,
+recompute everything) lands at 53.85% vs the paper's 54.1% — the 0.25pp gap
+is the hand-drawn figure's schedule; the derived improvement (7.7%~"8%")
+matches.
+"""
+import numpy as np
+import pytest
+
+from repro.core.chunking import construct_chunks
+from repro.core.schedule_sim import (Microbatch, chunks_to_microbatches,
+                                     sequences_to_microbatches, simulate_1f1b)
+
+LENGTHS = {0: 4, 1: 2, 2: 1, 3: 1}     # Fig. 2(a), longest-first order
+
+
+def test_equal_length_baseline():
+    r = simulate_1f1b(sequences_to_microbatches([1, 1, 1, 1]), 4)
+    assert abs(r.bubble_ratio - 3 / 7) < 1e-9          # 42.857%
+
+
+def test_fig2_variable_length_1f1b():
+    r = simulate_1f1b(sequences_to_microbatches([4, 2, 1, 1]), 4)
+    assert abs(r.bubble_ratio - 0.5714) < 2e-4          # 57.14%
+    # variable lengths strictly worse than the equal-length bound
+    assert r.bubble_ratio > 3 / 7
+
+
+def test_fig7_chunksize_too_large():
+    chunks = construct_chunks(LENGTHS, 4)               # -> only 2 chunks
+    assert len(chunks) == 2
+    r = simulate_1f1b(chunks_to_microbatches(chunks, k=1), 4, state_aware=True)
+    assert abs(r.bubble_ratio - 0.60) < 1e-9            # 60%
+    base = simulate_1f1b(sequences_to_microbatches([4, 2, 1, 1]), 4)
+    assert r.makespan > base.makespan                   # the degradation
+
+
+def _fig6_chunks():
+    chunks = construct_chunks(LENGTHS, 2)
+    assert len(chunks) == 4
+    assert all(c.tokens_used == 2 for c in chunks)
+    return chunks
+
+
+def test_fig6_paper_k2():
+    mbs = chunks_to_microbatches(_fig6_chunks(), k=1)   # paper-K=2
+    r = simulate_1f1b(mbs, 4, state_aware=True)
+    assert abs(r.bubble_ratio - 0.4783) < 1e-3          # paper: 47.8%
+
+
+def test_fig6_paper_k1_and_improvements():
+    base = simulate_1f1b(sequences_to_microbatches([4, 2, 1, 1]), 4)
+    chunks = _fig6_chunks()
+    # paper-K=1: recompute every dependent chunk (sim-k=0), standalone first
+    std = [c for c in chunks if not c.dependent]
+    dep = [c for c in chunks if c.dependent]
+    mbs1 = chunks_to_microbatches(std + dep, k=0)
+    r1 = simulate_1f1b(mbs1, 4, state_aware=True)
+    assert 0.53 <= r1.bubble_ratio <= 0.545             # paper: 54.1%
+    imp1 = (base.makespan - r1.makespan) / base.makespan
+    assert 0.06 <= imp1 <= 0.09                         # "approximately 8%"
+
+    mbs2 = chunks_to_microbatches(chunks, k=1)          # paper-K=2
+    r2 = simulate_1f1b(mbs2, 4, state_aware=True)
+    imp2 = (r1.makespan - r2.makespan) / r1.makespan
+    assert 0.10 <= imp2 <= 0.13                         # "12% enhancement"
+
+
+def test_state_aware_beats_baseline_on_longtail_batches():
+    """Property: over random long-tail batches, chunked state-aware 1F1B never
+    increases makespan vs raw variable-length 1F1B (with a tuned ChunkSize)."""
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        n = rng.randint(4, 12)
+        lens = [int(l) for l in np.ceil(rng.pareto(1.2, size=n) + 1)]
+        lens = [min(l, 64) for l in lens]
+        base = simulate_1f1b(
+            sequences_to_microbatches(sorted(lens, reverse=True)), 4)
+        best = None
+        for C in (2, 4, 8, 16):
+            chunks = construct_chunks(dict(enumerate(lens)), C)
+            for k in (0, 1, 2):
+                r = simulate_1f1b(chunks_to_microbatches(chunks, k=k), 4,
+                                  state_aware=True)
+                best = min(best, r.makespan) if best else r.makespan
+        assert best <= base.makespan * 1.0 + 1e-9
+
+
+def test_recompute_accounting():
+    mbs = [Microbatch(2.0, group=0, index_in_group=0, group_size=2,
+                      recompute=True),
+           Microbatch(2.0, group=0, index_in_group=1, group_size=2)]
+    r = simulate_1f1b(mbs, 2, state_aware=True)
+    assert r.recompute_time == 2.0 * 2                  # once per stage

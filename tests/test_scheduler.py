@@ -1,0 +1,46 @@
+"""Algorithm 2 schedule-generator tests (order, recompute count, memory bound)."""
+import pytest
+
+from repro.core.chunked_step import alg2_schedule
+
+
+@pytest.mark.parametrize("n,k", [(1, 1), (2, 1), (4, 1), (4, 2), (4, 4),
+                                 (7, 3), (16, 1), (16, 16), (5, 8)])
+def test_schedule_invariants(n, k):
+    ev = alg2_schedule(n, k)
+    fwd = [e[1] for e in ev if e[0] == "F"]
+    bwd = [e[1] for e in ev if e[0] == "B"]
+    re = [e[1] for e in ev if e[0] == "F2"]
+    assert fwd == list(range(n))                 # forwards ascending (§4.2)
+    assert bwd == list(range(n))[::-1]           # backwards descending (§4.2)
+    # the first N-K chunks are forwarded twice (§4.2 prose)
+    assert re == list(range(max(n - k, 0)))[::-1]
+    # every chunk backwarded exactly once
+    assert sorted(bwd) == list(range(n))
+
+
+@pytest.mark.parametrize("n,k", [(4, 1), (4, 2), (8, 3), (8, 8), (3, 5)])
+def test_schedule_peak_residuals(n, k):
+    """At most K chunks' activations (vjp residuals) are ever live."""
+    live, peak = set(), 0
+    for e in alg2_schedule(n, k):
+        if e[0] == "F" and e[2]:
+            live.add(e[1])
+        elif e[0] == "F2":
+            live.add(e[1])
+        elif e[0] == "B":
+            live.discard(e[1])
+        peak = max(peak, len(live))
+    assert peak <= max(k, 1)
+    assert peak == min(max(k, 1), n)
+
+
+def test_schedule_backward_dependency_order():
+    """KV-grad dependency: chunk i's backward needs all j>i backwards done."""
+    for n, k in [(4, 1), (6, 2), (5, 5)]:
+        done = set()
+        for e in alg2_schedule(n, k):
+            if e[0] == "B":
+                i = e[1]
+                assert all(j in done for j in range(i + 1, n))
+                done.add(i)

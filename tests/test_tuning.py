@@ -1,0 +1,41 @@
+"""Paper §5 grid search behaviour."""
+import numpy as np
+
+from repro.core.tuning import grid_search
+from repro.data.synthetic import LongTailSampler, PAPER_EVAL_CDF
+
+
+def _batches(n=4, batch=64, max_len=262_144, seed=0):
+    s = LongTailSampler(PAPER_EVAL_CDF, min_len=32, seed=seed,
+                        max_len=max_len)
+    return [dict(enumerate(s.sample_batch_lengths(batch))) for _ in range(n)]
+
+
+def test_no_pp_rule_k1_max_chunksize():
+    """Without PP: K=1 and the largest ChunkSize within memory (paper §5)."""
+    r = grid_search(_batches(), pp=1, memory_token_budget=32_768)
+    assert r.k == 1
+    assert r.chunk_size == 32_768     # biggest allowed always wins w/o PP
+    r2 = grid_search(_batches(), pp=1, memory_token_budget=8_192)
+    assert r2.chunk_size == 8_192     # memory bound respected
+
+
+def test_pp_prefers_interior_point():
+    """With PP=4 and the paper's memory budget, the best config is interior
+    (neither min-chunk nor the single-biggest-chunk corner) — Table 6."""
+    r = grid_search(_batches(), pp=4, memory_token_budget=32_768)
+    assert (r.chunk_size, r.k) in r.table
+    # the extremes of Table 6 must not win
+    worst_small = r.table.get((2048, 16))
+    worst_big = r.table.get((32_768, 1))
+    assert r.score <= worst_small and r.score <= worst_big
+    assert 2048 <= r.chunk_size <= 32_768
+    # memory budget honored
+    assert r.chunk_size * r.k <= 32_768
+
+
+def test_scores_deterministic():
+    b = _batches(n=2)
+    r1 = grid_search(b, pp=4, memory_token_budget=16_384)
+    r2 = grid_search(b, pp=4, memory_token_budget=16_384)
+    assert r1.table == r2.table
