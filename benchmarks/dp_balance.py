@@ -1,0 +1,73 @@
+"""DP-balance benchmark — LPT vs round-robin chunk-group assignment.
+
+Samples global batches from the paper's long-tail CDF (Table 2), runs
+Algorithm 1 chunk construction, builds token-work units, and plans them onto
+DP ranks under both policies. Reports the metric the paper's load-imbalance
+argument is about: **max-rank token work** (every other rank waits for it at
+the gradient all-reduce), plus the wave-padding waste the SPMD executor
+actually pays (core/chunked_step._run_batch_dp).
+"""
+import numpy as np
+
+from repro.core import dp_balance
+from repro.core.chunking import construct_chunks, group_chunks
+from repro.data.synthetic import LongTailSampler, PAPER_EVAL_CDF
+
+# ChunkSize chosen so a 256-sequence paper-CDF batch yields a realistic unit
+# mix (~32 units: packed bins + the occasional multi-chunk tail group); at
+# 8192 nearly everything folds into a handful of equal bins and there is
+# nothing left to balance.
+CHUNK_SIZE = 2048
+GLOBAL_BATCH = 256
+N_TRIALS = 5
+
+
+def rows(seed: int = 0):
+    out = []
+    for world_size in (2, 4, 8, 16):
+        agg = {p: {"max_rank_work": [], "imbalance": [], "padded": []}
+               for p in ("round_robin", "lpt")}
+        for trial in range(N_TRIALS):
+            s = LongTailSampler(PAPER_EVAL_CDF, seed=seed * 1000 + trial,
+                                max_len=262_144)
+            lengths = dict(enumerate(s.sample_batch_lengths(GLOBAL_BATCH)))
+            chunks = construct_chunks(lengths, CHUNK_SIZE)
+            groups, standalone = group_chunks(chunks)
+            units = dp_balance.units_from_chunks(groups, standalone, k=2)
+            cmp = dp_balance.compare_policies(units, world_size)
+            for pol, m in cmp.items():
+                agg[pol]["max_rank_work"].append(m["max_rank_work"])
+                agg[pol]["imbalance"].append(m["imbalance"])
+                agg[pol]["padded"].append(m["padded_slot_fraction"])
+        row = {"world_size": world_size}
+        for pol in ("round_robin", "lpt"):
+            row[pol] = {k: float(np.mean(v)) for k, v in agg[pol].items()}
+        row["max_work_reduction"] = 1.0 - (
+            row["lpt"]["max_rank_work"] / row["round_robin"]["max_rank_work"])
+        out.append(row)
+    return out
+
+
+def run(seed: int = 0):
+    """Print the comparison table; return the BENCH payload dict."""
+    data = rows(seed)
+    print(f"paper-CDF batch={GLOBAL_BATCH}, ChunkSize={CHUNK_SIZE}, "
+          f"{N_TRIALS} trials")
+    print("world,rr_max_work,lpt_max_work,reduction,"
+          "rr_imbalance,lpt_imbalance,rr_padded,lpt_padded")
+    for r in data:
+        rr, lpt = r["round_robin"], r["lpt"]
+        print(f"{r['world_size']},{rr['max_rank_work']:.0f},"
+              f"{lpt['max_rank_work']:.0f},{r['max_work_reduction']:.3f},"
+              f"{rr['imbalance']:.3f},{lpt['imbalance']:.3f},"
+              f"{rr['padded']:.3f},{lpt['padded']:.3f}")
+    return {
+        "chunk_size": CHUNK_SIZE,
+        "global_batch": GLOBAL_BATCH,
+        "n_trials": N_TRIALS,
+        "rows": data,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -1,11 +1,26 @@
 """Benchmark harness — one section per paper table/figure + microbenchmarks.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--json-dir DIR]
+
+Sections that return a payload dict additionally emit it as
+``BENCH_<section>.json`` (the machine-readable flow CI and the roofline
+tooling consume); print-only sections emit nothing.
 """
+import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
+
+
+def emit_json(name: str, payload, json_dir: str = "."):
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"[bench] wrote {path}")
 
 
 def _timeit(fn, n=5):
@@ -52,7 +67,12 @@ def micro_rows():
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=".",
+                    help="where BENCH_*.json payloads are written")
+    args = ap.parse_args(argv)
+
     print("=" * 70)
     print("## Tables 1-2: length distributions")
     from benchmarks import length_distribution
@@ -74,10 +94,19 @@ def main() -> None:
     end_to_end.run()
 
     print("=" * 70)
+    print("## DP balance: LPT vs round-robin chunk-group assignment")
+    from benchmarks import dp_balance
+    emit_json("dp_balance", dp_balance.run(), args.json_dir)
+
+    print("=" * 70)
     print("## Microbenchmarks")
     print("name,us_per_call,derived")
-    for name, us, derived in micro_rows():
+    micro = micro_rows()
+    for name, us, derived in micro:
         print(f"{name},{us:.0f},{derived}")
+    emit_json("micro",
+              [{"name": n, "us_per_call": us, "derived": d}
+               for n, us, d in micro], args.json_dir)
 
     print("=" * 70)
     print("## Roofline (from dryrun_results.jsonl if present)")

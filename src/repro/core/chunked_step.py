@@ -24,7 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import dp_balance
 from repro.core import statestore as ss
+from repro.distributed import sharding
 from repro.models import api
 
 
@@ -161,20 +163,34 @@ def run_group(cfg: ModelConfig, params, chunk_batches, *, k: int = 1,
     return total_loss, grads, stats
 
 
+def _batch_loss_scale(groups, standalone) -> float:
+    total_tokens = 0.0
+    for g in groups:
+        total_tokens += sum(float(np.sum(b["loss_mask"])) for b in g)
+    total_tokens += sum(float(np.sum(b["loss_mask"])) for b in standalone)
+    return 1.0 / max(total_tokens, 1.0)
+
+
 def run_batch(cfg: ModelConfig, params, groups, standalone, *, k: int = 1,
-              blockwise_threshold: int = 8192):
+              blockwise_threshold: int = 8192, mesh=None,
+              plan_policy: str = "lpt"):
     """One full training micro-iteration over the chunks of a sampled batch:
     every dependent group via Algorithm 2, every standalone chunk as a
     singleton group; gradients accumulate across all of them (paper Fig. 3).
 
     groups: list[list[chunk_batch]]; standalone: list[chunk_batch]
-    Returns (mean_loss, grads, stats)."""
-    total_tokens = 0.0
-    for g in groups:
-        total_tokens += sum(float(np.sum(b["loss_mask"])) for b in g)
-    total_tokens += sum(float(np.sum(b["loss_mask"])) for b in standalone)
-    scale = 1.0 / max(total_tokens, 1.0)
+    Returns (mean_loss, grads, stats).
 
+    mesh: optional jax mesh with a "data" axis. With >1 DP devices the batch
+    is executed by the DP orchestrator (`_run_batch_dp`): the dp_balance
+    planner assigns units to ranks and the work runs as batch-dim-sharded
+    waves. With a 1-device mesh (or mesh=None) this is the plain
+    single-device path — bit-for-bit the pre-DP behavior."""
+    if mesh is not None and sharding.dp_size(mesh) > 1:
+        return _run_batch_dp(cfg, params, groups, standalone, mesh, k=k,
+                             blockwise_threshold=blockwise_threshold,
+                             plan_policy=plan_policy)
+    scale = _batch_loss_scale(groups, standalone)
     grads = None
     loss = 0.0
     stats = SchedulerStats()
@@ -189,3 +205,66 @@ def run_batch(cfg: ModelConfig, params, groups, standalone, *, k: int = 1,
                                     blockwise_threshold=blockwise_threshold)
         loss += l
     return loss, grads, stats
+
+
+# ------------------------------------------------------- DP orchestration ---
+def dummy_chunk_row(like):
+    """All-padding chunk row (segment_ids == 0 everywhere): fully masked in
+    attention, zero loss_mask, so its loss and gradients are exactly zero."""
+    return jax.tree.map(jnp.zeros_like, like)
+
+
+def stack_chunk_rows(rows):
+    """Merge per-rank (1, C, ...) chunk batches into one (R, C, ...) batch —
+    row r is DP rank r's chunk for this slot."""
+    keys = rows[0].keys()
+    assert all(r.keys() == keys for r in rows), "non-uniform chunk keys"
+    return {kk: jnp.concatenate([r[kk] for r in rows], axis=0)
+            for kk in keys}
+
+
+def _run_batch_dp(cfg: ModelConfig, params, groups, standalone, mesh, *,
+                  k: int = 1, blockwise_threshold: int = 8192,
+                  plan_policy: str = "lpt"):
+    """Data-parallel Algorithm 2 (paper's DP-balanced chunk-group training).
+
+    The dp_balance planner assigns every dependent group / packed standalone
+    chunk to a DP rank by token-work (LPT). Execution is lockstep *waves*:
+    one work unit per rank per wave, each unit's chunk i stacked across ranks
+    into a (R, C) batch whose batch dim is sharded over the mesh's data axes
+    — so rank r's work physically runs on device r, params stay replicated,
+    and the gradient psum across ranks is inserted by GSPMD when the vjp
+    pulls the (replicated) param cotangent out of the (sharded) batch loss.
+    Ranks whose unit is shorter than the wave's longest pad with dummy
+    all-masked chunks: zero loss, zero grads, pure idle — the same bubble a
+    real cluster would pay, which is what the planner minimizes.
+
+    Numerically equivalent to the single-device path (same loss scale, same
+    per-row math; fp32 summation order differs -> ~1e-6 relative). Caveat:
+    with a MoE aux loss coefficient > 0, dummy rows add router aux terms the
+    single-device path does not have (padding tokens already do today).
+    """
+    scale = _batch_loss_scale(groups, standalone)
+    units = dp_balance.units_from_materialized(groups, standalone, k=k)
+    plan = dp_balance.plan_assignment(units, sharding.dp_size(mesh),
+                                      policy=plan_policy)
+    waves, _ = dp_balance.wave_schedule(plan)
+
+    params_r = sharding.replicate_put(mesh, params)
+    grads, total_loss = None, 0.0
+    stats = SchedulerStats()
+    for wave in waves:
+        live = [u for u in wave if u is not None]
+        n_max = max(u.n_chunks for u in live)
+        template = live[0].payload[0]
+        slots = []
+        for i in range(n_max):
+            rows = [u.payload[i] if (u is not None and i < u.n_chunks)
+                    else dummy_chunk_row(template) for u in wave]
+            slots.append(sharding.dp_put(cfg, stack_chunk_rows(rows), mesh))
+        l, grads, stats = run_group(cfg, params_r, slots, k=k,
+                                    loss_scale=scale, grads=grads,
+                                    stats=stats,
+                                    blockwise_threshold=blockwise_threshold)
+        total_loss = total_loss + l
+    return total_loss, grads, stats

@@ -1,0 +1,242 @@
+"""DP-balance planner — Algorithm 2 across data-parallel ranks.
+
+The paper's core systems claim is that variable-length batches create load
+imbalance under data parallelism: a rank that drew the 256K-token tail
+sequence does quadratically more attention work than a rank full of <1K
+chat turns, and every other rank idles at the gradient all-reduce. This
+module plans *which rank runs which chunk work* so that per-rank **token
+work** (not sequence count) is balanced.
+
+Units of assignment are the outputs of Algorithm 1:
+  * a dependent chunk group (one long sequence's chunks — indivisible, the
+    StateStore threads K/V through the whole group on one rank);
+  * a packed standalone chunk (bin of short sequences).
+
+Cost model (paper §3): execution time per chunk is linear in tokens plus a
+quadratic attention term — for dependent chunk ``i`` the queries attend to
+the full ``i*C`` prefix, for a packed chunk each segment only attends to
+itself. Backward costs 2x forward, and the first ``N-K`` chunks of a group
+pay one recompute forward (Algorithm 2).
+
+Policies:
+  * ``lpt``        — greedy Longest-Processing-Time: sort units by work
+                     descending, always assign to the least-loaded rank
+                     (4/3-approx of the optimal makespan);
+  * ``round_robin``— the naive baseline (what sequence-count DP does).
+
+``wave_schedule`` is the simulator bridge: the SPMD executor
+(core/chunked_step.py) runs the plan as lockstep *waves* — one work unit per
+rank per wave, shorter units padded with dummy chunks — so padded-slot waste
+and the max/min work ratio are exactly the imbalance a real mesh would pay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Optional
+
+import numpy as np
+
+
+# ------------------------------------------------------------ cost model ----
+ATTN_HORIZON = 4096     # tokens at which the quadratic term matches linear
+
+
+def chunk_token_work(tokens_used: int, prefix_len: int, seg_lengths=None, *,
+                     horizon: int = ATTN_HORIZON) -> float:
+    """Forward cost of one chunk in token-work units.
+
+    tokens_used: real (non-pad) tokens in the chunk.
+    prefix_len:  StateStore prefix this chunk attends to (dependent chunks).
+    seg_lengths: per-segment lengths for packed standalone chunks — each
+                 segment only attends within itself.
+    """
+    t = float(tokens_used)
+    if seg_lengths is not None:
+        quad = float(sum(l * l for l in seg_lengths))
+    else:
+        quad = t * (prefix_len + t)
+    return t + quad / horizon
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkUnit:
+    """One indivisible piece of DP work: a dependent group or a standalone
+    packed chunk. ``payload`` is opaque to the planner (the executor stores
+    its list of materialized chunk batches there)."""
+    kind: str                    # "group" | "standalone"
+    key: Any                     # group id / standalone index (for reports)
+    n_chunks: int
+    work: float
+    payload: Any = None
+
+    def __repr__(self):
+        return (f"WorkUnit({self.kind}:{self.key}, n={self.n_chunks}, "
+                f"work={self.work:.1f})")
+
+
+def unit_work(chunk_works, k: int = 1) -> float:
+    """Full Algorithm-2 cost of a unit: every chunk pays F + 2F (backward);
+    the first N-K chunks pay one recompute forward."""
+    w = list(chunk_works)
+    keep_from = max(len(w) - max(k, 1), 0)
+    return 3.0 * sum(w) + sum(w[:keep_from])
+
+
+def units_from_chunks(groups: dict, standalone: list, *, k: int = 1,
+                      horizon: int = ATTN_HORIZON) -> list:
+    """Build WorkUnits from Algorithm-1 output (`chunking.group_chunks`).
+
+    groups: {group_id: [Chunk ordered]}; standalone: [Chunk]."""
+    units = []
+    for gid, chunks in groups.items():
+        works = [chunk_token_work(c.tokens_used, c.index_in_group *
+                                  c.chunk_size, horizon=horizon)
+                 for c in chunks]
+        units.append(WorkUnit("group", gid, len(chunks),
+                              unit_work(works, k=k), payload=chunks))
+    for idx, c in enumerate(standalone):
+        w = chunk_token_work(c.tokens_used, 0,
+                             seg_lengths=[it.length for it in c.items],
+                             horizon=horizon)
+        units.append(WorkUnit("standalone", idx, 1, unit_work([w], k=k),
+                              payload=[c]))
+    return units
+
+
+def _batch_chunk_work(chunk_batch, index_in_group: int, dependent: bool, *,
+                      horizon: int = ATTN_HORIZON) -> float:
+    """Token work of one *materialized* chunk batch (row 0 of (1,C) arrays)."""
+    seg = np.asarray(chunk_batch["segment_ids"])[0]
+    t = int((seg > 0).sum())
+    C = int(seg.shape[0])
+    if dependent:
+        return chunk_token_work(t, index_in_group * C, horizon=horizon)
+    seg_lens = [int((seg == s).sum()) for s in np.unique(seg) if s > 0]
+    return chunk_token_work(t, 0, seg_lengths=seg_lens, horizon=horizon)
+
+
+def units_from_materialized(group_batches: list, standalone_batches: list, *,
+                            k: int = 1, horizon: int = ATTN_HORIZON) -> list:
+    """Build WorkUnits from `launch.train.build_host_batches` output:
+    group_batches: list[list[chunk_batch dict]]; standalone: [chunk_batch].
+    Prefer host (numpy) batches — device arrays cost one blocking readback
+    per chunk here."""
+    units = []
+    for gid, batches in enumerate(group_batches):
+        works = [_batch_chunk_work(b, i, True, horizon=horizon)
+                 for i, b in enumerate(batches)]
+        units.append(WorkUnit("group", gid, len(batches),
+                              unit_work(works, k=k), payload=batches))
+    for idx, b in enumerate(standalone_batches):
+        w = _batch_chunk_work(b, 0, False, horizon=horizon)
+        units.append(WorkUnit("standalone", idx, 1, unit_work([w], k=k),
+                              payload=[b]))
+    return units
+
+
+# --------------------------------------------------------------- planner ----
+@dataclasses.dataclass
+class DPPlan:
+    world_size: int
+    rank_units: list                 # list[list[WorkUnit]], ordered streams
+    policy: str
+
+    @property
+    def rank_work(self) -> list:
+        return [sum(u.work for u in units) for units in self.rank_units]
+
+    @property
+    def max_work(self) -> float:
+        return max(self.rank_work) if self.world_size else 0.0
+
+    @property
+    def imbalance(self) -> float:
+        """max-rank work relative to perfect balance (1.0 = ideal). This is
+        the iteration-time slowdown every other rank pays at the gradient
+        all-reduce."""
+        total = sum(self.rank_work)
+        if total <= 0:
+            return 1.0
+        return self.max_work * self.world_size / total
+
+    @property
+    def max_min_ratio(self) -> float:
+        w = self.rank_work
+        lo = min(w)
+        return float("inf") if lo <= 0 else max(w) / lo
+
+
+def plan_assignment(units: list, world_size: int, *,
+                    policy: str = "lpt") -> DPPlan:
+    """Assign WorkUnits to ``world_size`` rank streams.
+
+    Deterministic: ties break on (work desc, kind, key) for sorting and on
+    rank index inside the heap. Each rank's stream is ordered largest-first
+    so `wave_schedule` aligns big units with big units across ranks."""
+    assert world_size >= 1
+    rank_units = [[] for _ in range(world_size)]
+    if policy == "lpt":
+        order = sorted(units, key=lambda u: (-u.work, -u.n_chunks,
+                                             u.kind, str(u.key)))
+        heap = [(0.0, r) for r in range(world_size)]
+        heapq.heapify(heap)
+        for u in order:
+            load, r = heapq.heappop(heap)
+            rank_units[r].append(u)
+            heapq.heappush(heap, (load + u.work, r))
+    elif policy == "round_robin":
+        for i, u in enumerate(units):
+            rank_units[i % world_size].append(u)
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+    for stream in rank_units:
+        stream.sort(key=lambda u: (-u.n_chunks, -u.work, u.kind, str(u.key)))
+    return DPPlan(world_size, rank_units, policy)
+
+
+# ------------------------------------------------------- wave simulator -----
+@dataclasses.dataclass
+class WaveStats:
+    n_waves: int
+    total_slots: int                 # chunk-slots executed incl. padding
+    padded_slots: int                # dummy chunk-slots (rank idle)
+    max_wave_chunks: list            # per-wave slot count (max n over ranks)
+
+    @property
+    def padded_fraction(self) -> float:
+        return self.padded_slots / self.total_slots if self.total_slots else 0.0
+
+
+def wave_schedule(plan: DPPlan):
+    """-> (waves, WaveStats). Each wave is a list of length world_size of
+    Optional[WorkUnit]: the unit each rank executes in lockstep. The executor
+    pads every unit in a wave to the wave's max chunk count with dummy
+    chunks, so `padded_slots` is exactly the compute wasted to imbalance."""
+    n_waves = max((len(s) for s in plan.rank_units), default=0)
+    waves, padded, per_wave = [], 0, []
+    for w in range(n_waves):
+        wave = [s[w] if w < len(s) else None for s in plan.rank_units]
+        n_max = max(u.n_chunks for u in wave if u is not None)
+        padded += sum(n_max - (u.n_chunks if u else 0) for u in wave)
+        per_wave.append(n_max)
+        waves.append(wave)
+    total = sum(per_wave) * plan.world_size
+    return waves, WaveStats(n_waves, total, padded, per_wave)
+
+
+def compare_policies(units: list, world_size: int,
+                     policies=("round_robin", "lpt")) -> dict:
+    """Benchmark hook: plan under each policy, report imbalance metrics."""
+    out = {}
+    for pol in policies:
+        plan = plan_assignment(units, world_size, policy=pol)
+        _, ws = wave_schedule(plan)
+        out[pol] = {
+            "max_rank_work": plan.max_work,
+            "imbalance": plan.imbalance,
+            "max_min_ratio": plan.max_min_ratio,
+            "n_waves": ws.n_waves,
+            "padded_slot_fraction": ws.padded_fraction,
+        }
+    return out

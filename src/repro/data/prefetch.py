@@ -1,0 +1,100 @@
+"""Host-side async prefetch — overlap chunk construction with device compute.
+
+Algorithm 1 (sampling, chunk construction, bin packing, materialization into
+padded numpy arrays) is pure host work; the device is idle while it runs and
+vice versa. `Prefetcher` moves that work to a background thread with a
+bounded queue (double-buffering by default): while the device executes step
+``t``'s Algorithm 2, the thread is already building step ``t+1``'s chunk
+batches.
+
+The producer runs entirely in numpy — device transfer (jnp.asarray /
+device_put) stays on the consumer thread, keeping JAX dispatch
+single-threaded. Exceptions in the producer are captured and re-raised on
+the consumer thread at the matching `next()` call, so failures surface at
+the step that needed the data instead of dying silently.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+
+class _Stop:
+    pass
+
+
+class _Error:
+    def __init__(self, exc):
+        self.exc = exc
+
+
+class Prefetcher:
+    """Iterate a producer callable on a background thread, ``depth`` items
+    ahead.
+
+    producer: callable (step: int) -> item, run for steps [0, n_steps) —
+              must be thread-safe with respect to the consumer (the train
+              driver only touches device state, the producer only host RNG
+              and numpy buffers).
+    depth:    queue bound; 2 = classic double buffering.
+    """
+
+    def __init__(self, producer, n_steps: int, *, depth: int = 2,
+                 name: str = "chunk-prefetch"):
+        assert depth >= 1
+        self._q = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._n = n_steps
+
+        def work():
+            try:
+                for step in range(n_steps):
+                    if self._stop.is_set():
+                        return
+                    item = producer(step)
+                    while not self._stop.is_set():
+                        try:
+                            self._q.put(item, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+            except BaseException as e:        # re-raised on the consumer side
+                self._q.put(_Error(e))
+                return
+            self._q.put(_Stop())
+
+        self._thread = threading.Thread(target=work, daemon=True, name=name)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, _Stop):
+            raise StopIteration
+        if isinstance(item, _Error):
+            raise item.exc
+        return item
+
+    def close(self):
+        """Stop the producer and drop anything buffered."""
+        self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def synchronous(producer, n_steps: int):
+    """Drop-in replacement for Prefetcher with depth=0 semantics (no thread,
+    no overlap) — the --prefetch 0 escape hatch for debugging."""
+    return (producer(step) for step in range(n_steps))

@@ -1,0 +1,29 @@
+"""JAX version-compatibility shims for the SPMD executors.
+
+`shard_map` graduated from `jax.experimental.shard_map` (kwarg `check_rep`)
+to `jax.shard_map` (kwarg `check_vma`), and `jax.lax.pcast` only exists
+under the new varying-manual-axes type system. Route through here so the
+executors run on both API generations.
+"""
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map, _CHECK_KW = jax.shard_map, "check_vma"
+else:                                        # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    kw = {} if check_vma is None else {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def pcast_varying(x, axes):
+    """`jax.lax.pcast(x, axes, to="varying")` where it exists; identity under
+    the pre-VMA type system (replication there is checked by value, not by
+    type, and `check_rep=False` regions skip the check entirely)."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to="varying")
+    return x

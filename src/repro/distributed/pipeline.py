@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.distributed.compat import pcast_varying, shard_map
 from repro.models import layers as L
 
 
@@ -83,7 +84,7 @@ def pipelined_chunk_forward(cfg: ModelConfig, stage_layers, x_mbs, pos_mbs,
     hd = cfg.resolved_head_dim
 
     def varying(x):
-        return jax.lax.pcast(x, (axis,), to="varying")
+        return pcast_varying(x, (axis,))
 
     kbuf0 = varying(jnp.zeros((Lp, B, maxP, cfg.num_kv_heads, hd), x_mbs.dtype))
     vbuf0 = jnp.zeros_like(kbuf0)
@@ -152,10 +153,11 @@ def make_pipeline_step(cfg: ModelConfig, mesh, n_stages: int,
     def loss_fn(params, batch):
         stage_layers = split_stages(params["layers"], n_stages)
         x_mbs = params["embed"][batch["tokens"]]
-        outs = jax.shard_map(
+        outs = shard_map(
             body, mesh=mesh,
             in_specs=(P(axis), P(), P(), P(), P()),
             out_specs=P(),
+            check_vma=False,
         )(stage_layers, x_mbs, batch["positions"], batch["segment_ids"],
           batch["dep_flags"])
         x = L.rms_norm(outs, params["ln_f"], cfg.norm_eps)

@@ -19,7 +19,7 @@ from __future__ import annotations
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 
@@ -154,6 +154,33 @@ def adafactor_opt_specs(pspecs, params_shape):
     return {"slots": jax.tree.map(slot, pspecs, params_shape,
                                   is_leaf=lambda s: isinstance(s, P)),
             "step": P()}
+
+
+def dp_size(mesh) -> int:
+    """Total data-parallel degree of a mesh (pod x data)."""
+    pod, data, _ = mesh_sizes(mesh)
+    return pod * data
+
+
+def replicate_put(mesh, tree):
+    """Place a pytree on the mesh fully replicated (params, opt state).
+    No-op when the tree is already resident-replicated there."""
+    s = NamedSharding(mesh, P())
+    leaves = jax.tree.leaves(tree)
+    if leaves and getattr(leaves[0], "sharding", None) == s:
+        return tree          # placed by an earlier step (train keeps state
+                             # resident); leaves share one placement
+    return jax.tree.map(lambda x: jax.device_put(x, s), tree)
+
+
+def dp_put(cfg: ModelConfig, batch, mesh):
+    """Place a chunk-batch pytree on the mesh with batch dims sharded over
+    the DP axes (via `batch_specs`) — row r of the batch lives on DP rank r,
+    which is what makes the planner's rank assignment physical."""
+    specs = batch_specs(cfg, batch, mesh)
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+        batch, specs)
 
 
 def batch_specs(cfg: ModelConfig, batch_shape, mesh):

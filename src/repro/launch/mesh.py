@@ -12,6 +12,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_data_mesh(n_data: int = None):
+    """Pure data-parallel mesh for the chunk-group orchestrator
+    (core/chunked_step.run_batch with mesh=...). Defaults to every visible
+    device; on CPU use XLA_FLAGS=--xla_force_host_platform_device_count=N."""
+    n = n_data or len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
 def make_pipeline_mesh(n_stages: int = 4, data: int = 1):
     """Small mesh for the shard_map pipeline executor (tests / examples)."""
     if data > 1:

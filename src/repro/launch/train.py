@@ -1,19 +1,27 @@
 """End-to-end ChunkFlow fine-tuning driver (paper Fig. 3 workflow).
 
-Each iteration: sample a long-tail batch -> Algorithm 1 chunk construction ->
+Each iteration: sample a long-tail batch -> Algorithm 1 chunk construction
+(on a background prefetch thread, overlapped with device compute) ->
 Algorithm 2 state-aware scheduling (gradients accumulate across chunks &
-groups) -> one optimizer step. Mathematically equivalent to full-sequence
-training (tests/test_chunked_equivalence.py), with peak activation memory
-bounded by K * ChunkSize tokens.
+groups; with --dp N the dp_balance planner spreads chunk groups across a
+data mesh axis and GSPMD psums the gradients) -> one optimizer step with
+donated param/grad/opt buffers. Mathematically equivalent to full-sequence
+training (tests/test_chunked_equivalence.py, tests/test_dp_balance.py), with
+peak activation memory bounded by K * ChunkSize tokens per rank.
 
-CPU-scale entry point (the multi-pod path is exercised by launch/dryrun.py):
+CPU-scale entry points (the multi-pod path is exercised by launch/dryrun.py):
 
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
         --steps 20 --chunk-size 256 --k 1 --reduced
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --steps 5 --chunk-size 256 --k 1 --reduced --dp 4
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -23,60 +31,97 @@ import numpy as np
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_arch
 from repro.core import chunked_step, chunking
+from repro.data.prefetch import Prefetcher, synchronous
 from repro.data.synthetic import LongTailSampler, PAPER_EVAL_CDF
+from repro.distributed import sharding
+from repro.launch import mesh as mesh_lib
 from repro.models import api
 from repro.optim import adamw
 from repro.checkpoint.io import save_checkpoint
 
 
-def make_chunk_batches(cfg, seqs, lengths, chunk_size):
+def build_host_batches(seqs, lengths, chunk_size):
+    """Algorithm 1 on the host: chunk construction + materialization into
+    padded numpy arrays. Pure numpy — safe to run on the prefetch thread."""
     chunks = chunking.construct_chunks(lengths, chunk_size)
     groups, standalone = chunking.group_chunks(chunks)
-    to_dev = lambda m: {k: jnp.asarray(v) for k, v in m.items()}
-    gb = [[to_dev(chunking.materialize_chunk(c, seqs)) for c in g]
+    gb = [[chunking.materialize_chunk(c, seqs) for c in g]
           for g in groups.values()]
-    sb = [to_dev(chunking.materialize_chunk(c, seqs)) for c in standalone]
+    sb = [chunking.materialize_chunk(c, seqs) for c in standalone]
     return gb, sb, chunks
+
+
+def _to_device(gb, sb):
+    to_dev = lambda m: {k: jnp.asarray(v) for k, v in m.items()}
+    return [[to_dev(b) for b in g] for g in gb], [to_dev(b) for b in sb]
 
 
 def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
           max_len: int = 2048, log_every: int = 1, checkpoint_path=None,
-          sampler=None):
+          sampler=None, mesh=None, prefetch_depth: int = 2,
+          plan_policy: str = "lpt"):
     params = api.init_params(cfg, jax.random.PRNGKey(tc.seed),
                              max_seq=max_len + 8)
     opt_state = adamw.adamw_init(params)
     sampler = sampler or LongTailSampler(PAPER_EVAL_CDF, min_len=32,
                                          seed=tc.seed, max_len=max_len)
+    dp = sharding.dp_size(mesh) if mesh is not None else 1
+    if dp > 1:
+        # keep train state resident on the mesh (replicated) across steps so
+        # run_batch/apply_update never re-transfer it
+        params = sharding.replicate_put(mesh, params)
+        opt_state = sharding.replicate_put(mesh, opt_state)
 
-    @jax.jit
+    # donate params + opt state: adamw aliases them 1:1 into the outputs, so
+    # the optimizer step is in-place on device (grads have no aliasable
+    # output — donating them only buys a warning)
+    @functools.partial(jax.jit, donate_argnums=(0, 2))
     def apply_update(params, grads, opt_state, lr):
         return adamw.adamw_update(params, grads, opt_state, lr=lr,
                                   weight_decay=tc.weight_decay,
                                   grad_clip=tc.grad_clip)
 
-    history = []
-    for step in range(tc.total_steps):
-        t0 = time.time()
+    def produce(step):
         seqs, lengths = sampler.sample_batch(batch_per_step, cfg.vocab_size)
-        gb, sb, chunks = make_chunk_batches(cfg, seqs, lengths, tc.chunk_size)
-        loss, grads, stats = chunked_step.run_batch(
-            cfg, params, gb, sb, k=tc.k_chunks)
-        lr = adamw.cosine_schedule(step, base_lr=tc.learning_rate,
-                                   warmup_steps=tc.warmup_steps,
-                                   total_steps=tc.total_steps)
-        params, opt_state, gnorm = apply_update(params, grads, opt_state, lr)
-        dt = time.time() - t0
-        history.append({
-            "step": step, "loss": float(loss), "gnorm": float(gnorm),
-            "sec": dt, "n_chunks": len(chunks),
-            "n_groups": len(gb), "recomputes": stats.recompute_calls,
-            "peak_residuals": stats.max_live_residuals,
-        })
-        if step % log_every == 0:
-            h = history[-1]
-            print(f"step {step:4d} loss {h['loss']:.4f} gnorm {h['gnorm']:.3f}"
-                  f" chunks {h['n_chunks']:3d} (groups {h['n_groups']})"
-                  f" recompute {h['recomputes']} {dt:.2f}s")
+        return build_host_batches(seqs, lengths, tc.chunk_size)
+
+    stream = (Prefetcher(produce, tc.total_steps, depth=prefetch_depth)
+              if prefetch_depth > 0 else synchronous(produce, tc.total_steps))
+
+    history = []
+    try:
+        for step, (gb_h, sb_h, chunks) in enumerate(stream):
+            t0 = time.time()
+            # DP path consumes host batches directly: the planner reads token
+            # counts without device round-trips, and dp_put transfers each
+            # stacked wave slot straight to its sharded layout (no staging
+            # copy on the default device)
+            gb, sb = (gb_h, sb_h) if dp > 1 else _to_device(gb_h, sb_h)
+            loss, grads, stats = chunked_step.run_batch(
+                cfg, params, gb, sb, k=tc.k_chunks, mesh=mesh,
+                plan_policy=plan_policy)
+            lr = adamw.cosine_schedule(step, base_lr=tc.learning_rate,
+                                       warmup_steps=tc.warmup_steps,
+                                       total_steps=tc.total_steps)
+            params, opt_state, gnorm = apply_update(params, grads, opt_state,
+                                                    lr)
+            dt = time.time() - t0
+            history.append({
+                "step": step, "loss": float(loss), "gnorm": float(gnorm),
+                "sec": dt, "n_chunks": len(chunks),
+                "n_groups": len(gb), "recomputes": stats.recompute_calls,
+                "peak_residuals": stats.max_live_residuals,
+            })
+            if step % log_every == 0:
+                h = history[-1]
+                print(f"step {step:4d} loss {h['loss']:.4f}"
+                      f" gnorm {h['gnorm']:.3f}"
+                      f" chunks {h['n_chunks']:3d} (groups {h['n_groups']})"
+                      f" recompute {h['recomputes']} {dt:.2f}s"
+                      + (f" dp {dp}" if dp > 1 else ""))
+    finally:
+        if hasattr(stream, "close"):
+            stream.close()
     if checkpoint_path:
         save_checkpoint(checkpoint_path,
                         {"params": params, "opt": opt_state},
@@ -97,6 +142,15 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=1024)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel degree; needs >= dp visible devices "
+                         "(CPU: XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="host-side prefetch depth (0 = synchronous)")
+    ap.add_argument("--plan", default="lpt",
+                    choices=("lpt", "round_robin"),
+                    help="DP chunk-group assignment policy")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -104,8 +158,10 @@ def main(argv=None):
         cfg = cfg.reduced()
     tc = TrainConfig(chunk_size=args.chunk_size, k_chunks=args.k,
                      learning_rate=args.lr, total_steps=args.steps)
+    mesh = mesh_lib.make_data_mesh(args.dp) if args.dp > 1 else None
     train(cfg, tc, batch_per_step=args.batch, max_len=args.max_len,
-          checkpoint_path=args.checkpoint)
+          checkpoint_path=args.checkpoint, mesh=mesh,
+          prefetch_depth=args.prefetch, plan_policy=args.plan)
 
 
 if __name__ == "__main__":

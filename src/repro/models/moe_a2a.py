@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.distributed.compat import shard_map
 from repro.models.moe import moe_capacity
 
 
@@ -78,7 +79,7 @@ def moe_layer_eplocal(p, x, cfg: ModelConfig, mesh, dp, axis: str = "model"):
         out = picked.reshape(b_loc, t, K, D).sum(axis=2)
         return jax.lax.psum(out, axis)                        # the combine
 
-    out = jax.shard_map(
+    out = shard_map(
         body, mesh=mesh,
         in_specs=(P(axis, None, None), P(axis, None, None),
                   P(axis, None, None), P(dp, None, None),

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs.base import ModelConfig
 from repro.core import chunking, chunked_step
 from repro.models import api
@@ -192,7 +194,7 @@ def test_mixed_batch_run():
     assert_trees_close(grads, acc, rtol=5e-4, atol=5e-5)
 
 
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 
 @given(st.integers(40, 140), st.sampled_from([16, 32, 48]),

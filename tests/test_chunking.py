@@ -1,7 +1,7 @@
 """Algorithm 1 (chunk construction) unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core.chunking import (construct_chunks, group_chunks,
                                  materialize_chunk)

@@ -1,0 +1,225 @@
+"""DP-balance planner invariants + DP-vs-single-device training equivalence.
+
+The planner tests are pure host logic (fast lane). The execution equivalence
+test runs in a subprocess with 4 forced CPU devices (XLA_FLAGS must be set
+before jax initializes), like test_pipeline_exec.py.
+"""
+import os
+import random
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import dp_balance
+from repro.core.chunking import construct_chunks, group_chunks
+from repro.data.synthetic import LongTailSampler, PAPER_EVAL_CDF
+
+
+def sample_units(seed=0, n=128, chunk_size=1024, k=2):
+    s = LongTailSampler(PAPER_EVAL_CDF, seed=seed, max_len=65_536)
+    lengths = dict(enumerate(s.sample_batch_lengths(n)))
+    groups, standalone = group_chunks(construct_chunks(lengths, chunk_size))
+    return dp_balance.units_from_chunks(groups, standalone, k=k)
+
+
+# ------------------------------------------------------------ cost model ----
+def test_cost_model_monotone_and_quadratic():
+    w1 = dp_balance.chunk_token_work(100, 0)
+    w2 = dp_balance.chunk_token_work(200, 0)
+    assert w2 > w1
+    # deeper prefix -> strictly more attention work, same tokens
+    assert (dp_balance.chunk_token_work(100, 4096)
+            > dp_balance.chunk_token_work(100, 0))
+    # a packed chunk of two 50-token segments does less attention work than
+    # one 100-token segment (2*50^2 < 100^2)
+    packed = dp_balance.chunk_token_work(100, 0, seg_lengths=[50, 50])
+    single = dp_balance.chunk_token_work(100, 0, seg_lengths=[100])
+    assert packed < single
+
+
+def test_unit_work_counts_recompute():
+    # 4 chunks, k=1: 3 recomputes; k=4: none
+    w = [1.0, 1.0, 1.0, 1.0]
+    assert dp_balance.unit_work(w, k=1) == pytest.approx(12.0 + 3.0)
+    assert dp_balance.unit_work(w, k=4) == pytest.approx(12.0)
+
+
+# --------------------------------------------------------------- planner ----
+@pytest.mark.parametrize("world_size", [1, 2, 4, 8])
+@pytest.mark.parametrize("policy", ["lpt", "round_robin"])
+def test_every_unit_assigned_exactly_once(world_size, policy):
+    units = sample_units(seed=1)
+    plan = dp_balance.plan_assignment(units, world_size, policy=policy)
+    assigned = [u for stream in plan.rank_units for u in stream]
+    assert sorted(id(u) for u in assigned) == sorted(id(u) for u in units)
+
+
+def test_lpt_greedy_balance_bound():
+    """Greedy invariant: max rank load <= mean load + largest unit. This is
+    the bound that keeps the max/min token-work ratio controlled whenever no
+    single unit dominates the batch."""
+    for seed in range(5):
+        units = sample_units(seed=seed)
+        for R in (2, 4, 8):
+            plan = dp_balance.plan_assignment(units, R)
+            total = sum(u.work for u in units)
+            biggest = max(u.work for u in units)
+            assert plan.max_work <= total / R + biggest + 1e-6
+            if biggest <= total / R:     # no dominant unit -> ratio bounded
+                assert plan.max_min_ratio <= 3.0
+
+
+def test_lpt_beats_round_robin_on_long_tail():
+    for seed in range(3):
+        units = sample_units(seed=100 + seed, n=256, chunk_size=2048)
+        for R in (4, 8):
+            lpt = dp_balance.plan_assignment(units, R, policy="lpt")
+            rr = dp_balance.plan_assignment(units, R, policy="round_robin")
+            assert lpt.max_work <= rr.max_work + 1e-9
+
+
+def test_determinism_under_input_permutation():
+    units = sample_units(seed=3)
+    plan_a = dp_balance.plan_assignment(units, 4)
+    rng = random.Random(0)
+    for _ in range(3):
+        shuffled = list(units)
+        rng.shuffle(shuffled)
+        plan_b = dp_balance.plan_assignment(shuffled, 4)
+        keys_a = [[(u.kind, u.key) for u in s] for s in plan_a.rank_units]
+        keys_b = [[(u.kind, u.key) for u in s] for s in plan_b.rank_units]
+        assert keys_a == keys_b
+
+
+def test_dominant_group_isolated():
+    """One group larger than everything else combined: LPT gives it a rank of
+    its own and the imbalance equals its share (nothing can do better)."""
+    big = dp_balance.WorkUnit("group", 0, 16, 1000.0)
+    small = [dp_balance.WorkUnit("standalone", i, 1, 10.0) for i in range(6)]
+    plan = dp_balance.plan_assignment([big] + small, 4)
+    big_rank = [i for i, s in enumerate(plan.rank_units) if big in s]
+    assert len(big_rank) == 1 and plan.rank_units[big_rank[0]] == [big]
+    assert plan.max_work == pytest.approx(1000.0)
+
+
+def test_empty_standalone_and_empty_units():
+    lengths = {0: 100, 1: 90}          # only dependent groups, C=32
+    groups, standalone = group_chunks(construct_chunks(lengths, 32))
+    assert standalone == []
+    units = dp_balance.units_from_chunks(groups, standalone)
+    assert {u.kind for u in units} == {"group"}
+    plan = dp_balance.plan_assignment(units, 4)
+    waves, ws = dp_balance.wave_schedule(plan)
+    assert ws.n_waves == 1 and len(waves[0]) == 4
+    # fewer units than ranks: idle ranks pad the whole wave
+    assert waves[0].count(None) == 2
+
+    empty = dp_balance.plan_assignment([], 4)
+    assert empty.imbalance == 1.0
+    assert dp_balance.wave_schedule(empty)[1].n_waves == 0
+
+
+def test_world_size_one_is_trivial():
+    units = sample_units(seed=4)
+    plan = dp_balance.plan_assignment(units, 1)
+    assert len(plan.rank_units[0]) == len(units)
+    assert plan.imbalance == pytest.approx(1.0)
+    assert plan.max_min_ratio == pytest.approx(1.0)
+    _, ws = dp_balance.wave_schedule(plan)
+    assert ws.padded_slots == 0        # nothing to pad with one rank
+
+
+def test_wave_padding_accounting():
+    g5 = dp_balance.WorkUnit("group", 0, 5, 50.0)
+    g2 = dp_balance.WorkUnit("group", 1, 2, 20.0)
+    s1 = [dp_balance.WorkUnit("standalone", i, 1, 10.0) for i in range(2)]
+    plan = dp_balance.DPPlan(2, [[g5], [g2] + s1], "manual")
+    waves, ws = dp_balance.wave_schedule(plan)
+    # wave0: (g5, g2) -> n=5, rank1 pads 3; wave1: (None, s) -> n=1, pad 1;
+    # wave2: (None, s) -> n=1, pad 1
+    assert ws.n_waves == 3
+    assert ws.max_wave_chunks == [5, 1, 1]
+    assert ws.padded_slots == 5
+    assert ws.total_slots == (5 + 1 + 1) * 2
+
+
+# ------------------------------------------------ materialized-unit costs ---
+def test_units_from_materialized_matches_chunk_units():
+    """The executor-side unit builder (from padded arrays) must agree with
+    the benchmark-side builder (from Chunk metadata)."""
+    from repro.core.chunking import materialize_chunk
+    rng = np.random.RandomState(0)
+    lengths = {0: 80, 1: 9, 2: 14, 3: 30}
+    seqs = {i: rng.randint(1, 97, size=l).astype(np.int32)
+            for i, l in lengths.items()}
+    groups, standalone = group_chunks(construct_chunks(lengths, 32))
+    u_chunks = dp_balance.units_from_chunks(groups, standalone, k=1)
+    gb = [[materialize_chunk(c, seqs) for c in g] for g in groups.values()]
+    sb = [materialize_chunk(c, seqs) for c in standalone]
+    u_mat = dp_balance.units_from_materialized(gb, sb, k=1)
+    works_a = sorted(round(u.work, 6) for u in u_chunks)
+    works_b = sorted(round(u.work, 6) for u in u_mat)
+    assert works_a == works_b
+
+
+# ------------------------------------------- execution equivalence (slow) ---
+DP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.base import ModelConfig
+from repro.core import chunking, chunked_step
+from repro.models import api
+from repro.launch.mesh import make_data_mesh
+
+def run_family(family, lengths, C, k, policy):
+    base = dict(name=f"tiny-{family}", family=family, num_layers=2,
+                d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                d_ff=128, vocab_size=97, dtype="float32",
+                rope_theta=10_000.0)
+    if family == "ssm":
+        base.update(num_heads=0, num_kv_heads=0, d_ff=0, ssm_state=16,
+                    ssm_head_dim=32, ssm_chunk=16)
+    cfg = ModelConfig(**base)
+    rng = np.random.RandomState(0)
+    seqs = {i: rng.randint(1, cfg.vocab_size, size=l).astype(np.int32)
+            for i, l in lengths.items()}
+    params = api.init_params(cfg, jax.random.PRNGKey(4))
+    groups, standalone = chunking.group_chunks(
+        chunking.construct_chunks(lengths, C))
+    dev = lambda m: {kk: jnp.asarray(v) for kk, v in m.items()}
+    gb = [[dev(chunking.materialize_chunk(c, seqs)) for c in g]
+          for g in groups.values()]
+    sb = [dev(chunking.materialize_chunk(c, seqs)) for c in standalone]
+    l1, g1, _ = chunked_step.run_batch(cfg, params, gb, sb, k=k)
+    mesh = make_data_mesh(4)
+    l4, g4, _ = chunked_step.run_batch(cfg, params, gb, sb, k=k, mesh=mesh,
+                                       plan_policy=policy)
+    np.testing.assert_allclose(float(l4), float(l1), rtol=1e-5)
+    for x, y in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=5e-4, atol=5e-5)
+    print(family, policy, "ok", float(l1))
+
+# mixed: one 3-chunk group, one 2-chunk group, packed shorts + a dummy-padded
+# wave (7 units on 4 ranks)
+LEN = {0: 80, 1: 9, 2: 14, 3: 5, 4: 30, 5: 70, 6: 40, 7: 26, 8: 18}
+run_family("dense", LEN, 32, 1, "lpt")
+run_family("dense", LEN, 32, 2, "round_robin")
+run_family("ssm",   LEN, 32, 1, "lpt")
+# fewer units than ranks (idle ranks all-dummy)
+run_family("dense", {0: 40, 1: 12}, 32, 1, "lpt")
+print("DP-EQUIV-OK")
+"""
+
+
+@pytest.mark.slow
+def test_dp_matches_single_device_on_4_devices():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", DP_SCRIPT], env=env,
+                       capture_output=True, text=True,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=540)
+    assert "DP-EQUIV-OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]

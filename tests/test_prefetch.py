@@ -1,0 +1,78 @@
+"""Async host-side prefetch: ordering, overlap, error propagation, shutdown."""
+import threading
+import time
+
+import pytest
+
+from repro.data.prefetch import Prefetcher, synchronous
+
+
+def test_yields_all_items_in_order():
+    with Prefetcher(lambda step: step * step, 20, depth=2) as pf:
+        assert list(pf) == [s * s for s in range(20)]
+
+
+def test_matches_synchronous_stream():
+    def produce(step):
+        return ("batch", step, [step] * 3)
+    assert (list(Prefetcher(produce, 7, depth=3))
+            == list(synchronous(produce, 7)))
+
+
+def test_runs_ahead_of_consumer():
+    """With depth=2 the producer builds batches while the consumer 'computes'."""
+    produced = []
+    ran_ahead = threading.Event()
+
+    def produce(step):
+        produced.append(step)
+        if step >= 2:                   # item 0 consumed + 2 queued = ahead
+            ran_ahead.set()
+        return step
+
+    pf = Prefetcher(produce, 10, depth=2)
+    first = next(pf)
+    assert first == 0
+    # while the consumer sits on item 0, the producer must reach item 2
+    # without any further next() calls (item 0 handed over + depth-2 queue)
+    assert ran_ahead.wait(timeout=5.0), f"producer stalled at {produced}"
+    pf.close()
+
+
+def test_producer_exception_surfaces_at_next():
+    def produce(step):
+        if step == 3:
+            raise ValueError("boom at 3")
+        return step
+
+    pf = Prefetcher(produce, 10, depth=1)
+    got = []
+    with pytest.raises(ValueError, match="boom at 3"):
+        for item in pf:
+            got.append(item)
+    assert got == [0, 1, 2]
+
+
+def test_close_unblocks_producer_thread():
+    pf = Prefetcher(lambda step: step, 1000, depth=1)
+    assert next(pf) == 0
+    pf.close()
+    assert not pf._thread.is_alive()
+    # closing twice is fine
+    pf.close()
+
+
+def test_zero_depth_escape_hatch_is_lazy():
+    calls = []
+    gen = synchronous(lambda s: calls.append(s) or s, 5)
+    assert calls == []                  # nothing runs until consumed
+    assert next(gen) == 0 and calls == [0]
+
+
+def test_no_thread_leak():
+    before = threading.active_count()
+    for _ in range(5):
+        with Prefetcher(lambda step: step, 3, depth=2) as pf:
+            list(pf)
+    time.sleep(0.1)
+    assert threading.active_count() <= before + 1

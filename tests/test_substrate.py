@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.checkpoint.io import restore_checkpoint, save_checkpoint
 from repro.data.synthetic import (LMSYS_CDF, PAPER_EVAL_CDF, LongTailSampler)
