@@ -1,0 +1,195 @@
+"""Attention-backend microbenchmarks: fwd+bwd walltime, compile counts, and
+the dense-vs-flash crossover.
+
+    PYTHONPATH=src python -m benchmarks.attention [--json-dir DIR]
+
+Three sections:
+  * fwd / fwd+bwd walltime of the sdpa (dense-mask) vs blockwise
+    (online-softmax) XLA paths across kv lengths, reporting the first kv
+    length where blockwise wins (the dense-vs-flash crossover a deployment
+    should feed into `blockwise_threshold`);
+  * the Pallas flash kernel fwd and fwd+bwd in interpret mode — a
+    correctness/latency *proxy* only (Python-interpreted blocks; on TPU the
+    same pallas_call compiles);
+  * chunk-fn compile counts for a mixed batch of group sizes with the
+    static-shape StateStore: O(#capacity buckets), pinned against the
+    O(max-group-len) the grow-by-C prefix would pay.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, n=5):
+    fn()                                   # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _attn_inputs(S, B=1, Hq=4, Hkv=2, D=64):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    pos = jnp.arange(S)[None].repeat(B, 0)
+    seg = jnp.ones((B, S), jnp.int32)
+    return q, k, v, pos, seg
+
+
+def _xla_rows(kv_lens=(512, 1024, 2048, 4096)):
+    """sdpa vs blockwise fwd and fwd+bwd walltime; crossover kv length."""
+    from repro.models import layers as L
+
+    rows = []
+    crossover = {"fwd": None, "bwd": None}
+    for S in kv_lens:
+        q, k, v, pos, seg = _attn_inputs(S)
+
+        def sdpa_fn(q, k, v):
+            mask = L.make_attention_mask(pos, pos, seg, seg, causal=True)
+            return L.sdpa(q, k, v, mask)
+
+        def blockwise_fn(q, k, v):
+            blk = min(512, S)
+            def mask_fn(qi, ki):
+                qp = jax.lax.dynamic_slice_in_dim(pos, qi, blk, 1)
+                qs = jax.lax.dynamic_slice_in_dim(seg, qi, blk, 1)
+                kp = jax.lax.dynamic_slice_in_dim(pos, ki, blk, 1)
+                ks_ = jax.lax.dynamic_slice_in_dim(seg, ki, blk, 1)
+                return L.make_attention_mask(qp, kp, qs, ks_, causal=True)
+            return L.blockwise_sdpa(q, k, v, mask_fn, q_block=blk,
+                                    kv_block=blk)
+
+        row = {"kv_len": S}
+        for name, fn in (("sdpa", sdpa_fn), ("blockwise", blockwise_fn)):
+            fwd = jax.jit(lambda q, k, v, f=fn: f(q, k, v).sum())
+            bwd = jax.jit(jax.grad(lambda q, k, v, f=fn: f(q, k, v).sum(),
+                                   (0, 1, 2)))
+            row[f"{name}_fwd_us"] = _timeit(
+                lambda: jax.block_until_ready(fwd(q, k, v)), n=3)
+            row[f"{name}_fwdbwd_us"] = _timeit(
+                lambda: jax.block_until_ready(bwd(q, k, v)), n=3)
+        if crossover["fwd"] is None and \
+                row["blockwise_fwd_us"] < row["sdpa_fwd_us"]:
+            crossover["fwd"] = S
+        if crossover["bwd"] is None and \
+                row["blockwise_fwdbwd_us"] < row["sdpa_fwdbwd_us"]:
+            crossover["bwd"] = S
+        rows.append(row)
+    return rows, crossover
+
+
+def _pallas_rows():
+    """Interpret-mode flash kernel fwd and fwd+bwd (correctness proxy)."""
+    from repro.kernels import ops
+
+    B, T, P, Hq, Hkv, D = 1, 128, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, D))
+    k = jax.random.normal(ks[1], (B, P + T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, P + T, Hkv, D))
+    qp = (P + jnp.arange(T))[None]
+    kp = jnp.arange(P + T)[None]
+    ones_q = jnp.ones((B, T), jnp.int32)
+    ones_k = jnp.ones((B, P + T), jnp.int32)
+
+    def fwd(q, k, v):
+        return ops.chunk_attention(q, k, v, qp, kp, ones_q, ones_k,
+                                   block_q=64, block_k=64).sum()
+
+    bwd = jax.grad(fwd, (0, 1, 2))
+    return {
+        "shape": {"T": T, "P": P, "Hq": Hq, "Hkv": Hkv, "D": D},
+        "fwd_us": _timeit(lambda: jax.block_until_ready(fwd(q, k, v)), n=3),
+        "fwdbwd_us": _timeit(lambda: jax.block_until_ready(bwd(q, k, v)),
+                             n=3),
+        "note": "interpret mode (Python-executed blocks) — correctness "
+                "proxy, not TPU walltime",
+    }
+
+
+def _compile_count_rows(C=16):
+    """Chunk-fn compiles for a mixed batch of group sizes {1,2,4,5}."""
+    from repro.core import chunked_step, chunking
+    from repro.models import api
+    from repro.configs.base import ModelConfig
+
+    cfg = ModelConfig(name="bench-attn-compiles", family="dense",
+                      num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      head_dim=16, d_ff=128, vocab_size=97, dtype="float32",
+                      rope_theta=10_000.0)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    lengths = {0: C, 1: 2 * C, 2: 4 * C, 3: 5 * C}
+    seqs = {i: rng.randint(1, cfg.vocab_size, size=l).astype(np.int32)
+            for i, l in lengths.items()}
+    chunks = chunking.construct_chunks(lengths, C)
+    groups, standalone = chunking.group_chunks(chunks)
+    gb = [[{k: jnp.asarray(v) for k, v in
+            chunking.materialize_chunk(c, seqs).items()} for c in g]
+          for g in groups.values()]
+    sb = [{k: jnp.asarray(v) for k, v in
+           chunking.materialize_chunk(c, seqs).items()} for c in standalone]
+
+    chunked_step.reset_trace_log()
+    t0 = time.perf_counter()
+    chunked_step.run_batch(cfg, params, gb, sb, k=1)
+    wall = time.perf_counter() - t0
+    compiles = len(chunked_step.TRACE_EVENTS)
+    buckets = sorted({p for _, p, _ in chunked_step.TRACE_EVENTS})
+    total_steps = sum(len(g) for g in gb) + len(sb)
+    # grow-by-C would compile one executable per distinct prefix length,
+    # i.e. once per chunk index up to the longest group
+    legacy = max([len(g) for g in gb] + [1])
+    chunked_step.reset_trace_log()
+    return {
+        "chunk_size": C,
+        "group_sizes": [len(g) for g in gb] + [1] * len(sb),
+        "chunk_fn_compiles": compiles,
+        "capacity_buckets": [int(b) for b in buckets],
+        "legacy_compiles_grow_by_C": legacy,
+        "total_chunk_steps": total_steps,
+        "batch_walltime_s": wall,
+        "note": "compiles == #capacity buckets (static-shape StateStore); "
+                "legacy = distinct prefix lengths the grow-by-C store "
+                "would have compiled",
+    }
+
+
+def run() -> dict:
+    xla_rows, crossover = _xla_rows()
+    print("kv_len,sdpa_fwd_us,blockwise_fwd_us,sdpa_fwdbwd_us,"
+          "blockwise_fwdbwd_us")
+    for r in xla_rows:
+        print(f"{r['kv_len']},{r['sdpa_fwd_us']:.0f},"
+              f"{r['blockwise_fwd_us']:.0f},{r['sdpa_fwdbwd_us']:.0f},"
+              f"{r['blockwise_fwdbwd_us']:.0f}")
+    print(f"dense-vs-flash crossover: fwd @ kv_len={crossover['fwd']}, "
+          f"fwd+bwd @ kv_len={crossover['bwd']}")
+
+    pallas = _pallas_rows()
+    print(f"pallas interpret fwd {pallas['fwd_us']:.0f}us, "
+          f"fwd+bwd {pallas['fwdbwd_us']:.0f}us ({pallas['note']})")
+
+    compiles = _compile_count_rows()
+    print(f"chunk-fn compiles for group sizes {compiles['group_sizes']}: "
+          f"{compiles['chunk_fn_compiles']} "
+          f"(buckets {compiles['capacity_buckets']}; grow-by-C would be "
+          f"{compiles['legacy_compiles_grow_by_C']})")
+
+    return {"xla": xla_rows, "crossover": crossover, "pallas": pallas,
+            "compile_counts": compiles}
+
+
+if __name__ == "__main__":
+    import argparse
+    from benchmarks.run import emit_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=".")
+    args = ap.parse_args()
+    emit_json("attention", run(), args.json_dir)

@@ -99,6 +99,12 @@ def main(argv=None) -> None:
     emit_json("dp_balance", dp_balance.run(), args.json_dir)
 
     print("=" * 70)
+    print("## Attention backends: fwd+bwd walltime, compile counts, "
+          "dense-vs-flash crossover")
+    from benchmarks import attention
+    emit_json("attention", attention.run(), args.json_dir)
+
+    print("=" * 70)
     print("## Microbenchmarks")
     print("name,us_per_call,derived")
     micro = micro_rows()

@@ -57,9 +57,11 @@ class ModelConfig:
     # path sets it to the TP size — pad lanes are dead weight, standard
     # Megatron practice for head counts like yi's 56 or qwen2.5-14b's 40)
     pad_heads_to: int = 0
-    # attention backend: "xla" (sdpa/blockwise jnp) or "pallas_interpret"
-    # (the TPU kernel executed in interpret mode — on real TPUs this becomes
-    # the compiled pallas_call)
+    # attention backend selection ladder:
+    #   "xla"              sdpa (short) / blockwise online-softmax (long)
+    #   "pallas"           compiled flash kernel, fwd + custom_vjp bwd (TPU)
+    #   "pallas_interpret" same kernels executed in interpret mode (how this
+    #                      repo validates TPU kernels, incl. grads, on CPU)
     attn_backend: str = "xla"
 
     @property

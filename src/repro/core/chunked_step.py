@@ -59,10 +59,23 @@ def token_nll_sum(logits, labels, loss_mask):
     return jnp.sum(nll * loss_mask)
 
 
+# Trace-time log of the jitted chunk fn: one entry per *Python retrace*
+# (== per fresh XLA compile), recording the (prefix_capacity, chunk_len)
+# shape signature. With the static-shape StateStore this stays O(#buckets)
+# for a mixed batch; tests/test_compile_count.py pins that.
+TRACE_EVENTS: list = []
+
+
+def reset_trace_log():
+    TRACE_EVENTS.clear()
+    _jitted_chunk_fn.cache_clear()
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted_chunk_fn(cfg: ModelConfig, blockwise_threshold: int):
     def f(params, prefix, batch):
         P = ss.prefix_len(cfg, prefix)
+        TRACE_EVENTS.append((cfg.name, P, batch["tokens"].shape[1]))
         state = ss.assemble(cfg, prefix, batch)
         logits, new_state, aux = api.forward(
             cfg, params, batch, state, blockwise_threshold=blockwise_threshold)
@@ -80,17 +93,21 @@ def chunk_batch_with_prefix(chunk_batch: dict, prefix_meta):
     return b
 
 
-def _prefix_meta_init(B):
-    return (jnp.zeros((B, 0), jnp.int32), jnp.zeros((B, 0), jnp.int32))
+def _prefix_meta_init(B, capacity: int):
+    return (jnp.zeros((B, capacity), jnp.int32),
+            jnp.zeros((B, capacity), jnp.int32))
 
 
-def _prefix_meta_extend(meta, batch, cfg):
+def _prefix_meta_write(meta, batch, cfg, offset: int):
+    """Write this chunk's pos/seg into the capacity-length meta arrays at KV
+    slot ``offset`` (unwritten slots stay seg=0 => masked everywhere)."""
     pos, seg = meta
     bp = batch["positions"]
     if cfg.mrope and bp.ndim == 3:
         bp = bp[..., 0]
-    return (jnp.concatenate([pos, bp], axis=1),
-            jnp.concatenate([seg, batch["segment_ids"]], axis=1))
+    upd = lambda buf, x: jax.lax.dynamic_update_slice_in_dim(
+        buf, x.astype(buf.dtype), offset, axis=1)
+    return (upd(pos, bp), upd(seg, batch["segment_ids"]))
 
 
 # ------------------------------------------------------------ executor ------
@@ -98,18 +115,24 @@ def run_group(cfg: ModelConfig, params, chunk_batches, *, k: int = 1,
               loss_scale: float = 1.0, grads=None,
               blockwise_threshold: int = 8192, stats: SchedulerStats = None):
     """Run Algorithm 2 over one dependent-chunk group (or a singleton
-    standalone chunk). Returns (total_loss, grads, stats)."""
+    standalone chunk). Returns (total_loss, grads, stats).
+
+    Static shapes: the KV prefix is allocated once at the group's bucketed
+    capacity (`ss.prefix_capacity`) and each chunk's own K/V is written in at
+    offset i*C, so every chunk step in a bucket shares one compiled
+    executable (the unused tail keeps seg=0 and is exactly masked)."""
     stats = stats or SchedulerStats()
     f = _jitted_chunk_fn(cfg, blockwise_threshold)
     n = len(chunk_batches)
     B = chunk_batches[0]["tokens"].shape[0]
     C = chunk_batches[0]["tokens"].shape[1]
 
-    prefix = ss.empty_prefix(cfg, B, jnp.dtype(cfg.dtype))
-    meta = _prefix_meta_init(B)
+    cap = ss.prefix_capacity(n, C)
+    prefix = ss.alloc_prefix(cfg, B, cap, jnp.dtype(cfg.dtype))
+    meta = _prefix_meta_init(B, cap)
     prefixes, metas = [prefix], [meta]       # the StateStore (holds all K/V)
-    for batch in chunk_batches:
-        meta = _prefix_meta_extend(meta, batch, cfg)
+    for i, batch in enumerate(chunk_batches[:-1]):
+        meta = _prefix_meta_write(meta, batch, cfg, i * C)
         metas.append(meta)
 
     vjps, owns, pending = {}, {}, {i: None for i in range(n)}
@@ -145,10 +168,12 @@ def run_group(cfg: ModelConfig, params, chunk_batches, *, k: int = 1,
         if ev[0] == "F":
             _, i, keep = ev
             loss, own = fwd(i, keep)
-            if len(prefixes) <= i + 1:
-                prefixes.append(ss.extend(cfg, prefixes[i], own))
-            else:
-                prefixes[i + 1] = ss.extend(cfg, prefixes[i], own)
+            if i + 1 < n:       # the last chunk's own K/V has no reader
+                nxt = ss.write_own(cfg, prefixes[i], own, i * C)
+                if len(prefixes) <= i + 1:
+                    prefixes.append(nxt)
+                else:
+                    prefixes[i + 1] = nxt
             total_loss = total_loss + loss * loss_scale
             stats.forward_calls += 1
         elif ev[0] == "F2":
@@ -245,7 +270,8 @@ def _run_batch_dp(cfg: ModelConfig, params, groups, standalone, mesh, *,
     single-device path does not have (padding tokens already do today).
     """
     scale = _batch_loss_scale(groups, standalone)
-    units = dp_balance.units_from_materialized(groups, standalone, k=k)
+    units = dp_balance.units_from_materialized(groups, standalone, k=k,
+                                               static_shapes=True)
     plan = dp_balance.plan_assignment(units, sharding.dp_size(mesh),
                                       policy=plan_policy)
     waves, _ = dp_balance.wave_schedule(plan)

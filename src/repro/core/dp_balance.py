@@ -38,6 +38,19 @@ from typing import Any, Optional
 import numpy as np
 
 
+# ---------------------------------------------------- capacity bucketing ----
+def prefix_capacity(n_chunks: int, chunk_size: int) -> int:
+    """KV-prefix capacity of the static-shape StateStore for an n-chunk
+    group: the max prefix any chunk reads is (n-1)*C; bucket that chunk count
+    to the next power of two so mixed group lengths collapse onto a handful
+    of compiled shapes. Pure int math — shared by the planner's cost model
+    and core/statestore.py (which owns the actual buffers)."""
+    need = n_chunks - 1
+    if need <= 0 or chunk_size <= 0:
+        return 0
+    return (1 << (need - 1).bit_length()) * chunk_size
+
+
 # ------------------------------------------------------------ cost model ----
 ATTN_HORIZON = 4096     # tokens at which the quadratic term matches linear
 
@@ -84,14 +97,21 @@ def unit_work(chunk_works, k: int = 1) -> float:
 
 
 def units_from_chunks(groups: dict, standalone: list, *, k: int = 1,
-                      horizon: int = ATTN_HORIZON) -> list:
+                      horizon: int = ATTN_HORIZON,
+                      static_shapes: bool = False) -> list:
     """Build WorkUnits from Algorithm-1 output (`chunking.group_chunks`).
 
-    groups: {group_id: [Chunk ordered]}; standalone: [Chunk]."""
+    groups: {group_id: [Chunk ordered]}; standalone: [Chunk].
+    static_shapes: cost dependent chunks at the capacity-padded KV length
+    (what the static-shape StateStore actually computes — masked slots still
+    burn FLOPs) instead of the exact grow-by-C prefix."""
     units = []
     for gid, chunks in groups.items():
-        works = [chunk_token_work(c.tokens_used, c.index_in_group *
-                                  c.chunk_size, horizon=horizon)
+        cap = prefix_capacity(len(chunks), chunks[0].chunk_size)
+        works = [chunk_token_work(c.tokens_used,
+                                  cap if static_shapes
+                                  else c.index_in_group * c.chunk_size,
+                                  horizon=horizon)
                  for c in chunks]
         units.append(WorkUnit("group", gid, len(chunks),
                               unit_work(works, k=k), payload=chunks))
@@ -105,26 +125,35 @@ def units_from_chunks(groups: dict, standalone: list, *, k: int = 1,
 
 
 def _batch_chunk_work(chunk_batch, index_in_group: int, dependent: bool, *,
-                      horizon: int = ATTN_HORIZON) -> float:
+                      horizon: int = ATTN_HORIZON,
+                      prefix_override=None) -> float:
     """Token work of one *materialized* chunk batch (row 0 of (1,C) arrays)."""
     seg = np.asarray(chunk_batch["segment_ids"])[0]
     t = int((seg > 0).sum())
     C = int(seg.shape[0])
     if dependent:
-        return chunk_token_work(t, index_in_group * C, horizon=horizon)
+        prefix = (prefix_override if prefix_override is not None
+                  else index_in_group * C)
+        return chunk_token_work(t, prefix, horizon=horizon)
     seg_lens = [int((seg == s).sum()) for s in np.unique(seg) if s > 0]
     return chunk_token_work(t, 0, seg_lengths=seg_lens, horizon=horizon)
 
 
 def units_from_materialized(group_batches: list, standalone_batches: list, *,
-                            k: int = 1, horizon: int = ATTN_HORIZON) -> list:
+                            k: int = 1, horizon: int = ATTN_HORIZON,
+                            static_shapes: bool = False) -> list:
     """Build WorkUnits from `launch.train.build_host_batches` output:
     group_batches: list[list[chunk_batch dict]]; standalone: [chunk_batch].
     Prefer host (numpy) batches — device arrays cost one blocking readback
-    per chunk here."""
+    per chunk here. static_shapes: see `units_from_chunks`."""
     units = []
     for gid, batches in enumerate(group_batches):
-        works = [_batch_chunk_work(b, i, True, horizon=horizon)
+        cap = None
+        if static_shapes and batches:
+            C = int(np.asarray(batches[0]["segment_ids"]).shape[1])
+            cap = prefix_capacity(len(batches), C)
+        works = [_batch_chunk_work(b, i, True, horizon=horizon,
+                                   prefix_override=cap)
                  for i, b in enumerate(batches)]
         units.append(WorkUnit("group", gid, len(batches),
                               unit_work(works, k=k), payload=batches))

@@ -5,14 +5,24 @@ group (K/V tensors, SSD states, whisper encoder output). Integer position /
 segment arrays ride in the chunk batch instead, so `jax.vjp` only ever sees
 differentiable state.
 
+Static shapes: prefixes are allocated at a *capacity* bucketed to the next
+power of two of the group's chunk count (`prefix_capacity`), and each chunk
+writes its own K/V at offset ``i * C`` with `write_own`. Unused capacity
+slots keep seg=0, so every attention backend masks them out exactly — and
+every chunk of every group in the same bucket presents the executor's jitted
+chunk fn with ONE shape, instead of a fresh shape (and a fresh XLA compile)
+per chunk index. A standalone chunk is just capacity 0.
+
 Operations:
-  empty_prefix(cfg, B)                      zero-length prefix
+  prefix_capacity(n_chunks, C)              bucketed KV capacity (pow2 * C)
+  alloc_prefix(cfg, B, capacity)            capacity-padded zero prefix
+  write_own(cfg, prefix, own, offset)       -> prefix with own K/V at offset
   assemble(cfg, prefix, batch)              -> api.forward state (adds pos/seg)
   slice_own(cfg, new_state, P)              -> this chunk's own contribution
-  extend(cfg, prefix, own)                  -> prefix for the next chunk
   split_prefix_cot(cfg, cot, i, C)          -> {j: own-shaped cotangent}
       routes the KV gradients (paper §4.2 backward dependency) back to the
-      chunks that produced each state slice.
+      chunks that produced each state slice; capacity-padded cotangent slots
+      beyond i*C are zero (masked reads) and are simply dropped.
 """
 from __future__ import annotations
 
@@ -20,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.dp_balance import prefix_capacity  # noqa: F401  (re-export)
 from repro.models import api
 
 
@@ -27,8 +38,9 @@ def _attn_like(cfg: ModelConfig) -> bool:
     return cfg.family in ("dense", "moe", "vlm")
 
 
-def empty_prefix(cfg: ModelConfig, batch: int, dtype=None):
-    st = api.empty_state(cfg, batch, dtype)
+def alloc_prefix(cfg: ModelConfig, batch: int, capacity: int, dtype=None):
+    """Zero-filled prefix at ``capacity`` KV slots (seg=0 => fully masked)."""
+    st = api.empty_state(cfg, batch, dtype, capacity=capacity)
     if _attn_like(cfg):
         return {"k": st["k"], "v": st["v"]}
     if cfg.family == "ssm":
@@ -42,6 +54,7 @@ def empty_prefix(cfg: ModelConfig, batch: int, dtype=None):
 
 
 def prefix_len(cfg: ModelConfig, prefix) -> int:
+    """Static KV length (the capacity, for capacity-padded prefixes)."""
     if cfg.family == "ssm":
         return 0   # recurrent state has no length
     if cfg.family == "hybrid":
@@ -85,18 +98,29 @@ def slice_own(cfg: ModelConfig, new_state, P: int):
     raise ValueError(cfg.family)
 
 
-def extend(cfg: ModelConfig, prefix, own):
-    cat = lambda a, b: jnp.concatenate([a, b], axis=2)
+def _write(buf, own, offset):
+    return jax.lax.dynamic_update_slice_in_dim(
+        buf, own.astype(buf.dtype), offset, axis=2)
+
+
+def write_own(cfg: ModelConfig, prefix, own, offset: int):
+    """Next chunk's prefix: write ``own`` K/V into the capacity buffer at KV
+    slot ``offset`` (recurrent leaves are replaced wholesale). Functional —
+    returns a new prefix tree."""
     if _attn_like(cfg):
-        return {"k": cat(prefix["k"], own["k"]), "v": cat(prefix["v"], own["v"])}
+        return {"k": _write(prefix["k"], own["k"], offset),
+                "v": _write(prefix["v"], own["v"], offset)}
     if cfg.family == "ssm":
         return own
     if cfg.family == "hybrid":
-        return {"attn": {"k": cat(prefix["attn"]["k"], own["attn"]["k"]),
-                         "v": cat(prefix["attn"]["v"], own["attn"]["v"])},
+        return {"attn": {"k": _write(prefix["attn"]["k"], own["attn"]["k"],
+                                     offset),
+                         "v": _write(prefix["attn"]["v"], own["attn"]["v"],
+                                     offset)},
                 "mamba": own["mamba"]}
     if cfg.family == "audio":
-        return {"k": cat(prefix["k"], own["k"]), "v": cat(prefix["v"], own["v"]),
+        return {"k": _write(prefix["k"], own["k"], offset),
+                "v": _write(prefix["v"], own["v"], offset),
                 "enc_out": own["enc_out"]}
     raise ValueError(cfg.family)
 
@@ -106,8 +130,9 @@ def _zeros_like(t):
 
 
 def split_prefix_cot(cfg: ModelConfig, cot, i: int, chunk_size: int):
-    """cot = gradient w.r.t. chunk i's *prefix input* (length i*C for K/V;
-    the previous chunk's output for recurrent leaves). Returns
+    """cot = gradient w.r.t. chunk i's *prefix input* (capacity-length for
+    K/V — slots at or beyond i*C carry exact zeros since the chunk's reads
+    were masked; the previous chunk's output for recurrent leaves). Returns
     {j: own-shaped cotangent contribution} for j < i."""
     if i == 0:
         return {}

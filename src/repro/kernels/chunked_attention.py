@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: chunked prefix-KV flash attention.
+"""Pallas TPU kernels: chunked prefix-KV flash attention, forward + backward.
 
 This is ChunkFlow's compute hot-spot: a query chunk of T tokens attends to
 (prefix KV of earlier chunks) ++ (its own KV, causally). One fused kernel
@@ -6,11 +6,30 @@ handles both the standalone-packed case (segment-masked, prefix len 0) and
 the dependent-chunk case (prefix + causal), so the chunk scheduler never pays
 two attention launches.
 
-TPU mapping (DESIGN.md §2): grid (B, Hq, nQ, nK) with the kv axis innermost
-and sequential ("arbitrary") so the online-softmax running max / denominator
-/ accumulator live in VMEM scratch across kv steps; q/k/v blocks are
-BlockSpec-tiled into VMEM with MXU-aligned (128-multiple) block shapes; the
-two matmuls hit the MXU at f32 accumulation regardless of input dtype.
+The public entry point ``chunked_prefix_attention`` is *trainable*: it is
+wrapped in ``jax.custom_vjp`` with fused Pallas backward kernels
+(``_flash_bwd_dq_kernel`` / ``_flash_bwd_dkv_kernel``), so ``jax.vjp`` in the
+Algorithm-2 executor differentiates straight through the flash kernel instead
+of falling back to the dense sdpa path. The forward emits the standard
+softmax log-sum-exp residual; the backward recomputes P tiles from (q, k,
+lse) flash-attention style — no (T, S) score matrix is ever materialised in
+either direction.
+
+TPU mapping (DESIGN.md §2): forward + dq grids are (B, Hq, nQ, nK) with the
+kv axis innermost and sequential ("arbitrary") so the online-softmax running
+max / denominator / accumulator (resp. the dq accumulator) live in VMEM
+scratch across kv steps; the dkv grid is (B, Hkv, nK, G*nQ) with the fused
+(group-head, q-block) axis innermost so dk/dv accumulate over every query
+block *and* every GQA head that reads the kv block. q/k/v blocks are
+BlockSpec-tiled into VMEM with MXU-aligned (128-multiple) block shapes; all
+matmuls hit the MXU at f32 accumulation regardless of input dtype.
+
+Mask contract (shared by fwd and bwd): packed segments (seg == 0 is padding,
+never attends/attended), causality on global positions, and an optional
+sliding window. The window rides as a *dynamic* SMEM scalar so per-layer
+local/global alternation (a traced window under ``lax.scan``) hits one
+compiled kernel; ``window <= 0`` disables it and BIG_WINDOW-style sentinels
+are no-ops.
 """
 from __future__ import annotations
 
@@ -24,10 +43,29 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(qpos_ref, kpos_ref, qseg_ref, kseg_ref,
-                  q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr,
-                  *, scale, window, softcap, n_k):
+def _mask_block(qpos_ref, kpos_ref, qseg_ref, kseg_ref, w_ref):
+    """(bq, bk) bool mask from the pos/seg block refs + dynamic window."""
+    qp = qpos_ref[0][:, None]
+    kp = kpos_ref[0][None, :]
+    qs = qseg_ref[0][:, None]
+    ks = kseg_ref[0][None, :]
+    w = w_ref[0]
+    mask = (qs == ks) & (qs > 0) & (ks > 0) & (qp >= kp)
+    return mask & ((w <= 0) | ((qp - kp) < w))
+
+
+def _softcapped(s, softcap):
+    """Returns (scores, tanh) — tanh is reused by the backward chain rule."""
+    if not softcap:
+        return s, None
+    t = jnp.tanh(s / softcap)
+    return softcap * t, t
+
+
+# ================================================================ forward ====
+def _flash_fwd_kernel(w_ref, qpos_ref, kpos_ref, qseg_ref, kseg_ref,
+                      q_ref, k_ref, v_ref, o_ref, lse_ref,
+                      m_scr, l_scr, acc_scr, *, scale, softcap, n_k):
     ik = pl.program_id(3)
 
     @pl.when(ik == 0)
@@ -42,16 +80,8 @@ def _flash_kernel(qpos_ref, kpos_ref, qseg_ref, kseg_ref,
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    if softcap:
-        s = softcap * jnp.tanh(s / softcap)
-
-    qp = qpos_ref[0][:, None]                      # (bq, 1)
-    kp = kpos_ref[0][None, :]                      # (1, bk)
-    qs = qseg_ref[0][:, None]
-    ks = kseg_ref[0][None, :]
-    mask = (qs == ks) & (qs > 0) & (ks > 0) & (qp >= kp)
-    if window:
-        mask &= (qp - kp) < window
+    s, _ = _softcapped(s, softcap)
+    mask = _mask_block(qpos_ref, kpos_ref, qseg_ref, kseg_ref, w_ref)
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
@@ -66,19 +96,20 @@ def _flash_kernel(qpos_ref, kpos_ref, qseg_ref, kseg_ref,
 
     @pl.when(ik == n_k - 1)
     def _flush():
-        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
-        o_ref[0, 0, :, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        m, l = m_scr[...], l_scr[...]
+        # fully-masked rows (padding queries / unused capacity slots): zero
+        # output like the ref, and an LSE sentinel the backward maps to p=0.
+        valid = m > NEG_INF / 2
+        denom = jnp.maximum(l, 1e-30)[:, None]
+        o = jnp.where(valid[:, None], acc_scr[...] / denom, 0.0)
+        o_ref[0, 0, :, :] = o.astype(o_ref.dtype)
+        lse_ref[0, 0, :] = jnp.where(valid, m + jnp.log(jnp.maximum(l, 1e-30)),
+                                     NEG_INF)
 
 
-def chunked_prefix_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
-                             window: int = 0, softcap: float = 0.0,
-                             block_q: int = 128, block_k: int = 128,
-                             interpret: bool = False):
-    """q: (B, Hq, T, D); k/v: (B, Hkv, S, D) where S = prefix_len + T.
-    q_pos/q_seg: (B, T); k_pos/k_seg: (B, S). Returns (B, Hq, T, D).
-
-    Callers must pad T to block_q and S to block_k (pad slots get seg=0).
-    """
+def _flash_fwd(q, k, v, q_pos, k_pos, q_seg, k_seg, w, *, softcap, block_q,
+               block_k, interpret):
+    """Returns (o, lse); lse is the f32 (B, Hq, T) softmax residual."""
     B, Hq, T, D = q.shape
     _, Hkv, S, _ = k.shape
     assert T % block_q == 0 and S % block_k == 0, (T, S, block_q, block_k)
@@ -87,13 +118,13 @@ def chunked_prefix_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
     grid = (B, Hq, n_q, n_k)
 
     kernel = functools.partial(
-        _flash_kernel, scale=1.0 / (D ** 0.5), window=window,
-        softcap=softcap, n_k=n_k)
+        _flash_fwd_kernel, scale=1.0 / (D ** 0.5), softcap=softcap, n_k=n_k)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),
             pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),
             pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),
@@ -104,9 +135,14 @@ def chunked_prefix_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
             pl.BlockSpec((1, 1, block_k, D),
                          lambda b, h, iq, ik: (b, h // G, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, D),
-                               lambda b, h, iq, ik: (b, h, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
+        out_specs=(
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hq, T), jnp.float32),
+        ),
         scratch_shapes=[
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
@@ -116,4 +152,203 @@ def chunked_prefix_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q_pos, k_pos, q_seg, k_seg, q, k, v)
+    )(w, q_pos, k_pos, q_seg, k_seg, q, k, v)
+
+
+# =============================================================== backward ====
+def _p_and_ds(q, k, v, do, lse, delta, mask, *, scale, softcap):
+    """Recompute the probability tile and the score cotangent for one
+    (q-block, kv-block) pair. Shared by the dq and dkv kernels so the two
+    stay bit-identical on the mask/softcap contract."""
+    s_raw = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+    s, t = _softcapped(s_raw, softcap)
+    # p = exp(s - lse) on valid entries, exactly 0 elsewhere (incl. rows whose
+    # lse is the fully-masked sentinel: mask is False there too).
+    p = jnp.exp(jnp.where(mask, s - lse[:, None], NEG_INF))
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    if softcap:
+        ds = ds * (1.0 - t * t)
+    return p, ds
+
+
+def _flash_bwd_dq_kernel(w_ref, qpos_ref, kpos_ref, qseg_ref, kseg_ref,
+                         q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                         dq_ref, acc_scr, *, scale, softcap, n_k):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    mask = _mask_block(qpos_ref, kpos_ref, qseg_ref, kseg_ref, w_ref)
+    _, ds = _p_and_ds(q, k, v, do, lse_ref[0, 0], delta_ref[0, 0], mask,
+                      scale=scale, softcap=softcap)
+    acc_scr[...] += jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        dq_ref[0, 0, :, :] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(w_ref, qpos_ref, kpos_ref, qseg_ref, kseg_ref,
+                          q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                          dk_ref, dv_ref, dk_scr, dv_scr, *,
+                          scale, softcap, n_qh):
+    t = pl.program_id(3)           # fused (GQA head-in-group, q block) axis
+
+    @pl.when(t == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    mask = _mask_block(qpos_ref, kpos_ref, qseg_ref, kseg_ref, w_ref)
+    p, ds = _p_and_ds(q, k, v, do, lse_ref[0, 0], delta_ref[0, 0], mask,
+                      scale=scale, softcap=softcap)
+    dv_scr[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    dk_scr[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(t == n_qh - 1)
+    def _flush():
+        dk_ref[0, 0, :, :] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0, :, :] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _flash_bwd(q, k, v, q_pos, k_pos, q_seg, k_seg, w, do, lse, delta, *,
+               softcap, block_q, block_k, interpret):
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    n_q, n_k = T // block_q, S // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    pos_seg_specs = lambda qmap, kmap: [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, block_q), qmap),
+        pl.BlockSpec((1, block_k), kmap),
+        pl.BlockSpec((1, block_q), qmap),
+        pl.BlockSpec((1, block_k), kmap),
+    ]
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, scale=scale, softcap=softcap,
+                          n_k=n_k),
+        grid=(B, Hq, n_q, n_k),
+        in_specs=pos_seg_specs(lambda b, h, iq, ik: (b, iq),
+                               lambda b, h, iq, ik: (b, ik)) + [
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(w, q_pos, k_pos, q_seg, k_seg, q, k, v, do, lse, delta)
+
+    # dk/dv: one kv block accumulates over the fused (group head, q block)
+    # innermost axis t = g * n_q + iq, i.e. every reader of this kv block.
+    n_qh = G * n_q
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, scale=scale, softcap=softcap,
+                          n_qh=n_qh),
+        grid=(B, Hkv, n_k, n_qh),
+        in_specs=pos_seg_specs(lambda b, h, ik, t: (b, t % n_q),
+                               lambda b, h, ik, t: (b, ik)) + [
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, ik, t: (b, h * G + t // n_q, t % n_q, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik, t: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik, t: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, ik, t: (b, h * G + t // n_q, t % n_q, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, h, ik, t: (b, h * G + t // n_q, t % n_q)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, h, ik, t: (b, h * G + t // n_q, t % n_q)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik, t: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik, t: (b, h, ik, 0)),
+        ),
+        out_shape=(jax.ShapeDtypeStruct(k.shape, k.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype)),
+        scratch_shapes=[pltpu.VMEM((block_k, D), jnp.float32),
+                        pltpu.VMEM((block_k, D), jnp.float32)],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(w, q_pos, k_pos, q_seg, k_seg, q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ============================================================== custom_vjp ===
+@functools.lru_cache(maxsize=None)
+def _attention_fn(softcap: float, block_q: int, block_k: int,
+                  interpret: bool):
+    kw = dict(softcap=softcap, block_q=block_q, block_k=block_k,
+              interpret=interpret)
+
+    @jax.custom_vjp
+    def attn(q, k, v, q_pos, k_pos, q_seg, k_seg, w):
+        return _flash_fwd(q, k, v, q_pos, k_pos, q_seg, k_seg, w, **kw)[0]
+
+    def fwd(q, k, v, q_pos, k_pos, q_seg, k_seg, w):
+        o, lse = _flash_fwd(q, k, v, q_pos, k_pos, q_seg, k_seg, w, **kw)
+        return o, (q, k, v, q_pos, k_pos, q_seg, k_seg, w, o, lse)
+
+    def bwd(res, do):
+        q, k, v, q_pos, k_pos, q_seg, k_seg, w, o, lse = res
+        # delta_i = sum_j P_ij dP_ij = rowsum(do * o): the softmax-Jacobian
+        # diagonal term, cheap elementwise preprocess outside the kernels.
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                        axis=-1)
+        dq, dk, dv = _flash_bwd(q, k, v, q_pos, k_pos, q_seg, k_seg, w, do,
+                                lse, delta, **kw)
+        return dq, dk, dv, None, None, None, None, None
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def chunked_prefix_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
+                             window=0, softcap: float = 0.0,
+                             block_q: int = 128, block_k: int = 128,
+                             interpret: bool = False):
+    """q: (B, Hq, T, D); k/v: (B, Hkv, S, D) where S = prefix_len + T (the
+    prefix may be capacity-padded: unused slots carry seg=0 and are masked).
+    q_pos/q_seg: (B, T); k_pos/k_seg: (B, S). Returns (B, Hq, T, D).
+
+    Differentiable w.r.t. q/k/v via fused Pallas backward kernels. ``window``
+    may be a Python int or a traced int scalar (<= 0 disables); softcap and
+    block sizes are static. Callers must pad T to block_q and S to block_k
+    (pad slots get seg=0; fully-masked query rows return zeros).
+    """
+    w = jnp.asarray(0 if window is None else window, jnp.int32).reshape(1)
+    fn = _attention_fn(float(softcap), int(block_q), int(block_k),
+                       bool(interpret))
+    return fn(q, k, v, q_pos, k_pos, q_seg, k_seg, w)

@@ -5,6 +5,11 @@ padding, so model code can call them with the layouts layers.py uses.
 ``interpret=True`` executes the kernel body in Python on CPU (how this repo
 validates TPU kernels without TPU hardware); on a real TPU deployment the
 wrappers are called with interpret=False.
+
+Compile-cache discipline: padding happens *outside* the jitted core, so the
+core only ever sees (T, S) rounded up to block multiples. Repeated group
+shapes — e.g. every chunk of a capacity-padded StateStore bucket — therefore
+reuse one cached executable instead of re-jitting per exact (T, S) pair.
 """
 from __future__ import annotations
 
@@ -26,21 +31,35 @@ def _pad_to(x, axis, mult, value=0):
     return jnp.pad(x, widths, constant_values=value)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_q",
-                                             "block_k", "interpret"))
-def chunk_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *, window=0,
+@functools.partial(jax.jit, static_argnames=("softcap", "block_q", "block_k",
+                                             "interpret"))
+def _chunk_attention_core(q, k, v, q_pos, k_pos, q_seg, k_seg, window, *,
+                          softcap, block_q, block_k, interpret):
+    """Block-aligned (B,H,T,D) core. ``window`` is a dynamic int32 scalar
+    (0 = disabled) so traced per-layer windows don't fragment the cache."""
+    return chunked_prefix_attention(
+        q, k, v, q_pos, k_pos, q_seg, k_seg, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def chunk_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *, window=None,
                     softcap=0.0, block_q=128, block_k=128, interpret=True):
     """q: (B, T, Hq, D); k/v: (B, S, Hkv, D) (prefix ++ self, already
-    rope-rotated); returns (B, T, Hq, D)."""
+    rope-rotated); returns (B, T, Hq, D). Differentiable through the Pallas
+    custom_vjp (pad/transpose cotangents route around the kernel grads).
+
+    ``window``: None / 0 = disabled; may be a traced scalar (per-layer
+    local/global alternation)."""
     B, T, Hq, D = q.shape
     qt = _pad_to(q.transpose(0, 2, 1, 3), 2, block_q)
     kt = _pad_to(k.transpose(0, 2, 1, 3), 2, block_k)
     vt = _pad_to(v.transpose(0, 2, 1, 3), 2, block_k)
-    o = chunked_prefix_attention(
+    w = jnp.asarray(0 if window is None else window, jnp.int32)
+    o = _chunk_attention_core(
         qt, kt, vt,
         _pad_to(q_pos, 1, block_q), _pad_to(k_pos, 1, block_k),
-        _pad_to(q_seg, 1, block_q), _pad_to(k_seg, 1, block_k),
-        window=window, softcap=softcap, block_q=block_q, block_k=block_k,
+        _pad_to(q_seg, 1, block_q), _pad_to(k_seg, 1, block_k), w,
+        softcap=float(softcap), block_q=block_q, block_k=block_k,
         interpret=interpret)
     return o[:, :, :T].transpose(0, 2, 1, 3)
 

@@ -8,9 +8,14 @@ NEG_INF = -1e30
 
 
 def chunked_prefix_attention_ref(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
-                                 window: int = 0, softcap: float = 0.0):
+                                 window: int = 0, softcap: float = 0.0,
+                                 return_lse: bool = False):
     """Same contract as kernels.chunked_attention.chunked_prefix_attention.
-    q: (B,Hq,T,D), k/v: (B,Hkv,S,D)."""
+    q: (B,Hq,T,D), k/v: (B,Hkv,S,D). The prefix span of k/v may be
+    capacity-padded (seg=0 slots anywhere are masked out exactly).
+
+    With ``return_lse`` also returns the f32 (B,Hq,T) log-sum-exp the flash
+    forward emits as its backward residual (NEG_INF on fully-masked rows)."""
     B, Hq, T, D = q.shape
     Hkv = k.shape[1]
     G = Hq // Hkv
@@ -30,7 +35,12 @@ def chunked_prefix_attention_ref(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
     # fully-masked rows (padding queries) -> zero output like the kernel
     any_valid = mask.any(axis=-1)[:, None, None, :, None]
     o = jnp.einsum("bhgts,bhsd->bhgtd", p, vf) * any_valid
-    return o.reshape(B, Hq, T, D).astype(q.dtype)
+    o = o.reshape(B, Hq, T, D).astype(q.dtype)
+    if not return_lse:
+        return o
+    lse = jax.scipy.special.logsumexp(s, axis=-1)
+    lse = jnp.where(any_valid[..., 0], lse, NEG_INF)
+    return o, lse.reshape(B, Hq, T)
 
 
 def decode_attention_ref(q, k, v, cache_len, *, window: int = 0,

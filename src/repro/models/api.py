@@ -175,17 +175,25 @@ def init_params(cfg: ModelConfig, key, max_seq: int = 4096):
 
 
 # ============================================================ empty states ===
-def empty_state(cfg: ModelConfig, batch: int, dtype=None):
-    """Zero-length chunk state — lets forward() use one code path."""
+def empty_state(cfg: ModelConfig, batch: int, dtype=None, capacity: int = 0):
+    """Empty chunk state — lets forward() use one code path.
+
+    ``capacity`` pre-allocates the K/V (and pos/seg) length: the static-shape
+    StateStore hands every chunk of a group the same capacity-padded prefix
+    (unused slots keep seg=0 and are exactly masked out of attention), so the
+    jitted chunk step compiles once per capacity bucket instead of once per
+    chunk index. capacity=0 is the classic zero-length state."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     hd = cfg.resolved_head_dim
 
     def attn_state(n_layers):
         return {
-            "k": jnp.zeros((n_layers, batch, 0, cfg.padded_num_kv_heads, hd), dtype),
-            "v": jnp.zeros((n_layers, batch, 0, cfg.padded_num_kv_heads, hd), dtype),
-            "pos": jnp.zeros((batch, 0), jnp.int32),
-            "seg": jnp.zeros((batch, 0), jnp.int32),
+            "k": jnp.zeros((n_layers, batch, capacity,
+                            cfg.padded_num_kv_heads, hd), dtype),
+            "v": jnp.zeros((n_layers, batch, capacity,
+                            cfg.padded_num_kv_heads, hd), dtype),
+            "pos": jnp.zeros((batch, capacity), jnp.int32),
+            "seg": jnp.zeros((batch, capacity), jnp.int32),
         }
 
     def mamba_state(shape_prefix):

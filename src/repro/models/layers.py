@@ -305,13 +305,17 @@ def attention_layer(p, x, cfg: ModelConfig, *, positions, segment_ids,
     else:
         k_all, v_all, k_pos, k_seg = k, v, pos1d, segment_ids
 
+    # Backend ladder: pallas flash kernel (trainable custom_vjp; window rides
+    # as a dynamic scalar so local/global alternation shares one compile) ->
+    # dense sdpa for short sequences -> blockwise online-softmax for long.
     Tk = k_all.shape[1]
-    if cfg.attn_backend == "pallas_interpret" and window is None:
+    if cfg.attn_backend in ("pallas", "pallas_interpret"):
         from repro.kernels import ops
         out = ops.chunk_attention(
             q, k_all, v_all, pos1d, k_pos, segment_ids, k_seg,
-            softcap=cfg.attn_softcap, block_q=min(128, T),
-            block_k=min(128, Tk), interpret=True)
+            window=window, softcap=cfg.attn_softcap, block_q=min(128, T),
+            block_k=min(128, Tk),
+            interpret=(cfg.attn_backend == "pallas_interpret"))
     elif max(T, Tk) <= blockwise_threshold:
         mask = make_attention_mask(pos1d, k_pos, segment_ids, k_seg,
                                    causal=True, window=window)

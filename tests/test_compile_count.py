@@ -1,0 +1,89 @@
+"""Compile-count regression: the static-shape StateStore must make the
+jitted chunk fn compile O(#capacity buckets) times for a mixed batch of
+group sizes — NOT once per chunk index (the grow-by-C prefix pathology).
+
+We count *Python retraces* of the chunk fn (chunked_step.TRACE_EVENTS logs
+one entry per trace, which is 1:1 with fresh XLA compiles for a jitted fn).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chunked_step, chunking
+from repro.core.dp_balance import prefix_capacity
+from repro.models import api
+from test_chunked_equivalence import tiny
+
+C = 16
+
+
+def _batchify(cfg, rng, lengths):
+    seqs = {i: rng.randint(1, cfg.vocab_size, size=l).astype(np.int32)
+            for i, l in lengths.items()}
+    chunks = chunking.construct_chunks(lengths, C)
+    groups, standalone = chunking.group_chunks(chunks)
+    gb = [[{k: jnp.asarray(v) for k, v in
+            chunking.materialize_chunk(c, seqs).items()} for c in g]
+          for g in groups.values()]
+    sb = [{k: jnp.asarray(v) for k, v in
+           chunking.materialize_chunk(c, seqs).items()} for c in standalone]
+    return gb, sb
+
+
+def test_prefix_capacity_buckets():
+    assert prefix_capacity(1, C) == 0
+    assert prefix_capacity(2, C) == C
+    assert prefix_capacity(3, C) == 2 * C
+    assert prefix_capacity(4, C) == 4 * C
+    assert prefix_capacity(5, C) == 4 * C       # shares the n=4 bucket
+    assert prefix_capacity(8, C) == 8 * C
+    assert prefix_capacity(9, C) == 8 * C
+
+
+def test_chunk_fn_compiles_per_bucket_not_per_chunk():
+    cfg = tiny("dense", name="compile-count")   # fresh lru_cache key
+    rng = np.random.RandomState(0)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    chunked_step.reset_trace_log()
+
+    # group sizes {1, 2, 4}: capacity buckets {0, C, 4C}
+    gb, sb = _batchify(cfg, rng, {0: C, 1: 2 * C, 2: 4 * C})
+    loss, grads, _ = chunked_step.run_batch(cfg, params, gb, sb, k=1)
+    assert np.isfinite(float(loss))
+    n_first = len(chunked_step.TRACE_EVENTS)
+    shapes = {(p, c) for _, p, c in chunked_step.TRACE_EVENTS}
+    assert shapes == {(0, C), (C, C), (4 * C, C)}, shapes
+    # one trace per bucket — with grow-by-C prefixes this would be 4 distinct
+    # prefix lengths {0, C, 2C, 3C} and grow with the longest group.
+    assert n_first == len(shapes), chunked_step.TRACE_EVENTS
+
+    # same batch again: fully cached, zero new traces
+    chunked_step.run_batch(cfg, params, gb, sb, k=1)
+    assert len(chunked_step.TRACE_EVENTS) == n_first
+
+    # a *5*-chunk group shares the n=4 bucket (cap 4C): zero new compiles,
+    # even though chunk indices 0..4 were never run at these prefix lengths.
+    gb5, sb5 = _batchify(cfg, rng, {0: 5 * C})
+    assert len(gb5[0]) == 5 and not sb5
+    chunked_step.run_batch(cfg, params, gb5, sb5, k=1)
+    assert len(chunked_step.TRACE_EVENTS) == n_first, \
+        chunked_step.TRACE_EVENTS
+
+    # an 8-chunk group opens exactly one new bucket (8C)
+    gb8, sb8 = _batchify(cfg, rng, {0: 8 * C})
+    chunked_step.run_batch(cfg, params, gb8, sb8, k=2)
+    assert len(chunked_step.TRACE_EVENTS) == n_first + 1
+    chunked_step.reset_trace_log()
+
+
+def test_loss_matches_across_bucket_sharing():
+    """Sanity: a 5-chunk group (running in the padded n=4 bucket) still
+    produces the exact full-sequence loss."""
+    from test_chunked_equivalence import chunked_run, full_reference
+    cfg = tiny("dense", name="compile-count-loss")
+    rng = np.random.RandomState(1)
+    seq = rng.randint(1, cfg.vocab_size, size=5 * C).astype(np.int32)
+    params = api.init_params(cfg, jax.random.PRNGKey(2))
+    ref_loss, _ = full_reference(cfg, params, seq)
+    loss, _, _ = chunked_run(cfg, params, seq, C, 1)
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
