@@ -1,17 +1,24 @@
 """Paper Tables 1-2 — sequence-length distribution of the synthetic samplers
-vs the paper's reported CDFs."""
-from repro.data.synthetic import (LongTailSampler, LMSYS_CDF, PAPER_EVAL_CDF)
+vs the paper's reported CDFs.
+
+Lengths come from `core.chunking.sample_lengths` — the same public helper the
+serving arrival simulator (serving/frontend.py) draws from, so the benchmark
+checks exactly the distribution the engine is exercised with.
+"""
+import numpy as np
+
+from repro.core.chunking import sample_lengths
+from repro.data.synthetic import LMSYS_CDF, PAPER_EVAL_CDF
 
 
 def run(n=50_000):
     print("dataset,bucket,sampled_cdf,paper_cdf")
-    for name, cdf in [("paper_eval(T2)", PAPER_EVAL_CDF),
-                      ("lmsys(T1)", LMSYS_CDF)]:
-        s = LongTailSampler(cdf, seed=0)
-        stats = s.bucket_stats(n)
+    for name, dist, cdf in [("paper_eval(T2)", "paper_eval", PAPER_EVAL_CDF),
+                            ("lmsys(T1)", "lmsys", LMSYS_CDF)]:
+        lens = np.asarray(sample_lengths(dist, n, seed=0))
         for ub, target in cdf[:-1]:
-            print(f"{name},<{ub},{stats[ub]:.5f},{target}")
-        print(f"{name},max,{stats['max']},{cdf[-1][0]}")
+            print(f"{name},<{ub},{(lens < ub).mean():.5f},{target}")
+        print(f"{name},max,{int(lens.max())},{cdf[-1][0]}")
 
 
 if __name__ == "__main__":

@@ -105,6 +105,12 @@ def main(argv=None) -> None:
     emit_json("attention", attention.run(), args.json_dir)
 
     print("=" * 70)
+    print("## Serving engine: Poisson long-tail throughput + tail latency, "
+          "mixed-tick vs prefill-stall")
+    from benchmarks import serving
+    emit_json("serving", serving.run(), args.json_dir)
+
+    print("=" * 70)
     print("## Microbenchmarks")
     print("name,us_per_call,derived")
     micro = micro_rows()

@@ -1,0 +1,92 @@
+"""Serving engine benchmark: throughput + tail latency under Poisson
+arrivals with the paper's long-tail prompt-length distribution.
+
+Two engine modes on the identical request trace:
+  * mixed          — prefill chunks ride along with decode every tick
+                     (continuous batching, the engine default);
+  * prefill_stall  — a tick is either prefill or decode (``mixed=False``),
+                     the static-batching baseline where a long admitted
+                     prompt stalls every running decode.
+
+Emitted as BENCH_serving.json by benchmarks/run.py (and a CI artifact):
+throughput (tok/s), p50/p99 TTFT and end-to-end latency, engine counters
+(preemptions, padded prefill tokens, peak pages).
+
+    PYTHONPATH=src python -m benchmarks.serving [--json-dir DIR]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.serving import Engine, EngineConfig, poisson_requests
+from repro.serving.frontend import latency_percentiles
+
+
+def bench_cfg():
+    return ModelConfig(name="bench-serve", family="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                       d_ff=128, vocab_size=256, dtype="float32",
+                       rope_theta=10_000.0)
+
+
+def run(n_requests: int = 24, rate: float = 40.0, gen: int = 8,
+        seed: int = 0) -> dict:
+    cfg = bench_cfg()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(page_size=16, pages_total=64, max_running=4,
+                        prefill_chunk=32, prefill_slots=1,
+                        max_pages_per_req=16)
+    max_prompt = ecfg.max_model_len - gen - ecfg.prefill_chunk
+
+    payload = {"config": {"n_requests": n_requests, "poisson_rate": rate,
+                          "gen_tokens": gen, "length_dist": "paper_eval",
+                          "max_prompt": max_prompt,
+                          **dataclasses.asdict(ecfg)}}
+    print("mode,tok_s,ttft_p50,ttft_p99,e2e_p50,e2e_p99,ticks,preemptions")
+    for mode, mixed in [("mixed", True), ("prefill_stall", False)]:
+        engine = Engine(cfg, params, dataclasses.replace(ecfg, mixed=mixed))
+        engine.warmup()                     # compile off the measured path
+        reqs = poisson_requests(n_requests, rate, vocab_size=cfg.vocab_size,
+                                dist="paper_eval", seed=seed,
+                                max_new_tokens=gen, max_prompt=max_prompt)
+        t0 = time.perf_counter()
+        results = engine.run(reqs, clock="wall")
+        dt = time.perf_counter() - t0
+        lat = latency_percentiles(results)
+        toks = sum(len(r.tokens) for r in results)
+        payload[mode] = {
+            "wall_s": dt,
+            "throughput_tok_s": toks / dt,
+            "ttft": lat["ttft"],
+            "e2e": lat["e2e"],
+            **engine.summary(),
+        }
+        m = payload[mode]
+        print(f"{mode},{m['throughput_tok_s']:.1f},"
+              f"{m['ttft']['p50']:.3f},{m['ttft']['p99']:.3f},"
+              f"{m['e2e']['p50']:.3f},{m['e2e']['p99']:.3f},"
+              f"{m['ticks']},{m['n_preemptions']}")
+
+    payload["mixed_speedup_e2e_p99"] = (
+        payload["prefill_stall"]["e2e"]["p99"] / payload["mixed"]["e2e"]["p99"]
+        if payload["mixed"]["e2e"]["p99"] else None)
+    print(f"mixed-tick e2e p99 speedup over prefill-stall: "
+          f"{payload['mixed_speedup_e2e_p99']:.2f}x")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=".")
+    ap.add_argument("--n", type=int, default=24)
+    args = ap.parse_args(argv)
+    from benchmarks.run import emit_json
+    emit_json("serving", run(n_requests=args.n), args.json_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,7 @@
-"""Batched serving: chunked prefill + KV-cache decode on a reduced gemma2
-(sliding-window + softcap variant exercises the decode masks).
+"""Continuous-batching serving on a reduced gemma2 (sliding-window + softcap
+variant exercises the decode masks): requests stream through the engine's
+paged KV cache and the greedy tokens match the static-batch reference
+token-for-token.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -9,7 +11,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.launch.serve import generate
+from repro.launch.serve import generate, serve_engine
 from repro.models import api
 
 cfg = get_arch("gemma2-2b").reduced()
@@ -18,9 +20,14 @@ prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 1,
                              cfg.vocab_size)
 
 t0 = time.time()
-toks = generate(cfg, params, prompts, gen_len=16, chunk_size=32)
+toks, engine = serve_engine(cfg, params, prompts, gen_len=16, chunk_size=32)
 dt = time.time() - t0
-print(f"generated {toks.shape[0]}x{toks.shape[1]} tokens in {dt:.1f}s")
+print(f"engine generated {toks.shape[0]}x{toks.shape[1]} tokens in {dt:.1f}s")
+print(engine.summary())
 assert toks.shape == (4, 16)
 assert (np.asarray(toks) >= 0).all() and (np.asarray(toks) < cfg.vocab_size).all()
-print("ok")
+
+ref = generate(cfg, params, prompts, gen_len=16, chunk_size=32)
+assert (np.asarray(toks) == np.asarray(ref)).all(), \
+    "engine output diverged from the static-batch reference"
+print("ok — engine matches static-batch reference")

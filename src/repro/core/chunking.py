@@ -19,6 +19,30 @@ from typing import Optional
 import numpy as np
 
 
+def sample_lengths(dist="paper_eval", n: int = 1, seed: int = 0, *,
+                   min_len: int = 16, max_len: Optional[int] = None) -> list:
+    """Sample ``n`` sequence lengths from the paper's long-tail distributions.
+
+    ``dist``: ``"paper_eval"`` (Table 2), ``"lmsys"`` (Table 1), or an explicit
+    ``[(upper_bound, cdf), ...]`` list. The single public entry point for
+    long-tail lengths — the chunk planner benchmarks, the serving arrival
+    simulator and `benchmarks/length_distribution.py` all draw from here so
+    they stay calibrated to the same CDFs.
+    """
+    from repro.data.synthetic import (LMSYS_CDF, LongTailSampler,
+                                      PAPER_EVAL_CDF)
+    if isinstance(dist, str):
+        try:
+            cdf = {"paper_eval": PAPER_EVAL_CDF, "lmsys": LMSYS_CDF}[dist]
+        except KeyError:
+            raise ValueError(f"unknown length distribution {dist!r} "
+                             "(want 'paper_eval', 'lmsys' or a CDF list)")
+    else:
+        cdf = dist
+    sampler = LongTailSampler(cdf, min_len=min_len, seed=seed, max_len=max_len)
+    return sampler.sample_batch_lengths(n)
+
+
 @dataclasses.dataclass(frozen=True)
 class ChunkItem:
     seq_id: int

@@ -38,6 +38,35 @@ def _attn_like(cfg: ModelConfig) -> bool:
     return cfg.family in ("dense", "moe", "vlm")
 
 
+# ------------------------------------------------------- page geometry ------
+# The serving path (serving/kv_pages.py, models/decode.decode_step_paged,
+# kernels/decode_attention.paged_decode_attention) stores K/V in fixed-size
+# *pages* instead of one dense (B, max_seq) cache. These pure-int helpers are
+# the single source of truth for the page/chunk geometry the scheduler, the
+# allocator and the kernels all have to agree on: token at absolute position
+# ``pos`` of a request lives in the request's page-table entry ``pos // P``
+# at in-page offset ``pos % P``.
+
+def round_up(n: int, multiple: int) -> int:
+    """Round ``n`` up to a multiple (chunk padding, pool sizing)."""
+    assert multiple > 0
+    return -(-n // multiple) * multiple
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Pages required to hold ``n_tokens`` KV slots (ceil division)."""
+    assert page_size > 0
+    if n_tokens <= 0:
+        return 0
+    return -(-n_tokens // page_size)
+
+
+def page_slot(pos: int, page_size: int):
+    """-> (page_table_index, in_page_offset) of absolute KV slot ``pos``.
+    Works on Python ints and on traced int32 arrays alike."""
+    return pos // page_size, pos % page_size
+
+
 def alloc_prefix(cfg: ModelConfig, batch: int, capacity: int, dtype=None):
     """Zero-filled prefix at ``capacity`` KV slots (seg=0 => fully masked)."""
     st = api.empty_state(cfg, batch, dtype, capacity=capacity)

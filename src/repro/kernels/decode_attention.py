@@ -1,11 +1,21 @@
-"""Pallas TPU kernel: flash-decode attention against a KV cache.
+"""Pallas TPU kernels: flash-decode attention against a KV cache.
 
-One new token per request attends to ``cache_len`` cached K/V slots. Grid
-(B, Hq, nK) with the cache axis sequential; the running softmax state lives
-in VMEM scratch. ``cache_len`` arrives via scalar prefetch (SMEM) so the slot
-validity mask is computed on-core without materialising (B, S) masks in HBM.
-Optional ``window`` masks sliding-window layers (gemma2 local) — the memory
-saving for 500K decode comes from combining this with a ring cache upstream.
+``decode_attention`` — dense cache. One new token per request attends to
+``cache_len`` cached K/V slots. Grid (B, Hq, nK) with the cache axis
+sequential; the running softmax state lives in VMEM scratch. ``cache_len``
+arrives via scalar prefetch (SMEM) so the slot validity mask is computed
+on-core without materialising (B, S) masks in HBM. Optional ``window`` masks
+sliding-window layers (gemma2 local) — the memory saving for 500K decode
+comes from combining this with a ring cache upstream.
+
+``paged_decode_attention`` — paged cache (the serving engine's KV pool).
+K/V live in a shared pool of fixed-size pages ``(n_pages, page_size, Hkv, D)``
+and each request owns a *page table* of pool indices. The page table and the
+per-request ``cache_lens`` are scalar-prefetched, so the BlockSpec index map
+dereferences ``table[b, ip]`` on-core and the kernel DMAs exactly the pages a
+request owns — no dense (B, max_seq) gather ever materialises. Per-request
+cache lengths fall out for free: the validity mask compares against
+``lens_ref[b]`` instead of a shared scalar.
 """
 from __future__ import annotations
 
@@ -104,3 +114,121 @@ def decode_attention(q, k, v, cache_len, *, window: int = 0,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(cache_len, jnp.int32).reshape(1), q, k, v)
+
+
+# ----------------------------------------------------------- paged cache ----
+BIG_WINDOW = 1 << 30        # "no window" sentinel (matches models.api)
+
+
+def _paged_decode_kernel(tbl_ref, lens_ref, win_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_scr, l_scr, acc_scr, *, scale, softcap,
+                         page_size, n_pages_per_req):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cache_len = lens_ref[b]
+    window = win_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)            # (1, D)
+    k = k_ref[0].astype(jnp.float32)[:, 0, :]      # (page_size, D)
+    v = v_ref[0].astype(jnp.float32)[:, 0, :]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # absolute KV slot of each in-page lane: table entry ip covers slots
+    # [ip * page_size, (ip+1) * page_size)
+    slot = ip * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    mask = (slot <= cache_len) & ((cache_len - slot) < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(ip == n_pages_per_req - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_tables, cache_lens, *,
+                           window: int = 0, softcap: float = 0.0,
+                           interpret: bool = False):
+    """Flash-decode through a page table.
+
+    q:           (B, Hq, 1, D) — one new token per request.
+    k/v_pages:   (n_pages, page_size, Hkv, D) — the shared KV pool.
+    page_tables: (B, n_pages_per_req) int32 — pool index of each request
+                 page; entries past the request's allocation must point at a
+                 valid (e.g. null) page, they are masked by ``cache_lens``.
+    cache_lens:  (B,) int32 — the new token's slot per request (slots
+                 <= cache_lens[b] are attended, matching `decode_attention`).
+    window:      sliding window; 0 / BIG_WINDOW = global. May be a *traced*
+                 int32 scalar (it rides in SMEM via scalar prefetch), so a
+                 layer scan with local/global alternation shares one compile.
+
+    Returns (B, Hq, 1, D). The grid walks every request's full table; pages
+    past ``cache_lens[b]`` are DMA'd but fully masked, so correctness never
+    depends on table garbage, only the null-page convention keeps the indices
+    in range.
+    """
+    B, Hq, _, D = q.shape
+    n_pages, page_size, Hkv, _ = k_pages.shape
+    _, n_pages_per_req = page_tables.shape
+    G = Hq // Hkv
+    grid = (B, Hq, n_pages_per_req)
+
+    if isinstance(window, int):
+        window = window if window > 0 else BIG_WINDOW
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=1.0 / (D ** 0.5),
+        softcap=softcap, page_size=page_size,
+        n_pages_per_req=n_pages_per_req)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,          # page_tables, cache_lens, window
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, ip, tbl, lens, w: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, D),
+                         lambda b, h, ip, tbl, lens, w: (tbl[b, ip], 0,
+                                                         h // G, 0)),
+            pl.BlockSpec((1, page_size, 1, D),
+                         lambda b, h, ip, tbl, lens, w: (tbl[b, ip], 0,
+                                                         h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D),
+                               lambda b, h, ip, tbl, lens, w: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, D), q.dtype),
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(page_tables, jnp.int32), jnp.asarray(cache_lens, jnp.int32),
+      win, q, k_pages, v_pages)

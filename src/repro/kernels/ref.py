@@ -63,6 +63,35 @@ def decode_attention_ref(q, k, v, cache_len, *, window: int = 0,
     return o.reshape(B, Hq, 1, D).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, page_tables, cache_lens,
+                               *, window: int = 0, softcap: float = 0.0):
+    """Oracle for kernels.decode_attention.paged_decode_attention: gather the
+    pages dense, then run per-request masked sdpa. q: (B,Hq,1,D);
+    k/v_pages: (n_pages, page_size, Hkv, D); page_tables: (B, n_pages_per_req)
+    int32; cache_lens: (B,) int32."""
+    B, Hq, _, D = q.shape
+    n_pages_per_req = page_tables.shape[1]
+    page_size = k_pages.shape[1]
+    Hkv = k_pages.shape[2]
+    S = n_pages_per_req * page_size
+    G = Hq // Hkv
+    # (B, n_pages_per_req, page_size, Hkv, D) -> (B, Hkv, S, D)
+    k = k_pages[page_tables].reshape(B, S, Hkv, D).transpose(0, 2, 1, 3)
+    v = v_pages[page_tables].reshape(B, S, Hkv, D).transpose(0, 2, 1, 3)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, 1, D)
+    s = jnp.einsum("bhgtd,bhsd->bhgts", qf, k.astype(jnp.float32)) / (D ** 0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    slot = jnp.arange(S)
+    mask = slot[None] <= cache_lens[:, None]
+    if window:
+        mask &= (cache_lens[:, None] - slot[None]) < window
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgts,bhsd->bhgtd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
 def ssd_intra_chunk_ref(Cc, Bc, dA_cum, dt, xc):
     """Oracle for kernels.ssd_scan.ssd_intra_chunk (pairwise-einsum form,
     identical math to models/mamba2._ssd_chunk_scan's y_intra)."""

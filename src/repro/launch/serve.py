@@ -1,8 +1,15 @@
-"""Batched serving driver: chunked prefill (ChunkFlow's chunk-by-chunk
-forward doubles as memory-bounded prefill) + KV-cache decode.
+"""Serving driver.
+
+Default path: the continuous-batching engine (`repro.serving`) — paged KV
+cache, chunk-centric admission scheduler, one compiled step per tick.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
         --batch 4 --prompt-len 64 --gen 16
+
+`--static` falls back to the static-batch reference below: chunked prefill
+(ChunkFlow's chunk-by-chunk forward doubles as memory-bounded prefill) +
+dense KV-cache decode. The engine is tested token-exact against this path
+(tests/test_engine.py), so the reference doubles as the serving oracle.
 """
 from __future__ import annotations
 
@@ -18,40 +25,67 @@ from repro.models import api, decode
 from repro.core import statestore as ss
 
 
+# ---------------------------------------------------- static-batch oracle ---
 def chunked_prefill(cfg, params, tokens, chunk_size: int):
     """Prefill a batch of prompts chunk-by-chunk (bounded activation memory,
     the serving counterpart of Algorithm 2 phase 1). Returns (last_logits,
-    kv_state)."""
+    kv_state).
+
+    Attention-family tail chunks are padded to ``chunk_size`` with seg=0
+    (masked exactly, like `chunking.materialize_chunk` does for training):
+    every chunk presents ONE jit signature, and MoE expert capacity —
+    `moe.moe_capacity` is a function of the chunk length — stays uniform
+    across chunks, matching what the serving engine's fixed-size chunk slots
+    compute. The returned state is trimmed back to the ``T`` real slots.
+    """
     B, T = tokens.shape
+    attn = cfg.family in ("dense", "moe", "vlm")
     state = None
-    logits = None
+    last_logits = None
     for s0 in range(0, T, chunk_size):
         piece = tokens[:, s0: s0 + chunk_size]
         Tp = piece.shape[1]
+        if attn and Tp < chunk_size:
+            piece = jnp.concatenate(
+                [piece, jnp.zeros((B, chunk_size - Tp), piece.dtype)], axis=1)
+        Tc = piece.shape[1]
+        seg = (jnp.arange(Tc) < Tp).astype(jnp.int32)[None].repeat(B, 0)
         batch = {
             "tokens": piece,
-            "segment_ids": jnp.ones((B, Tp), jnp.int32),
-            "positions": (s0 + jnp.arange(Tp, dtype=jnp.int32))[None].repeat(B, 0),
+            "segment_ids": seg,
+            "positions": (s0 + jnp.arange(Tc, dtype=jnp.int32))[None].repeat(B, 0),
         }
         if cfg.mrope:
             batch["positions"] = jnp.stack([batch["positions"]] * 3, -1)
         logits, state, _ = api.forward(cfg, params, batch, state)
-    return logits[:, -1], state
+        last_logits = logits[:, Tp - 1]
+    if attn and state["k"].shape[2] > T:      # drop tail-chunk capacity pad
+        state = {"k": state["k"][:, :, :T], "v": state["v"][:, :, :T],
+                 "pos": state["pos"][:, :T], "seg": state["seg"][:, :T]}
+    return last_logits, state
 
 
 def state_to_cache(cfg, params, state, max_seq: int, batch: int):
-    """Convert the prefill chunk-state into a fixed-size decode cache."""
-    cache = decode.init_decode_cache(cfg, batch, max_seq)
+    """Convert the prefill chunk-state into a fixed-size decode cache.
+
+    Only attention families carry a (L, B, S, Hkv, hd) K/V state that maps
+    onto the dense decode cache. Recurrent / hybrid / enc-dec states need
+    family-specific plumbing (`decode.init_decode_cache` documents each
+    layout); converting them here would silently drop conv tails / cross-KV.
+    """
     if cfg.family in ("dense", "moe", "vlm"):
+        cache = decode.init_decode_cache(cfg, batch, max_seq)
         P = state["k"].shape[2]
         cache["k"] = jax.lax.dynamic_update_slice_in_dim(
             cache["k"], state["k"].astype(cache["k"].dtype), 0, axis=2)
         cache["v"] = jax.lax.dynamic_update_slice_in_dim(
             cache["v"], state["v"].astype(cache["v"].dtype), 0, axis=2)
         return cache, P
-    if cfg.family == "ssm":
-        return state, 0
-    raise NotImplementedError(cfg.family)
+    raise NotImplementedError(
+        f"state_to_cache only supports attention families (dense/moe/vlm); "
+        f"got {cfg.family!r} — build the cache with decode.init_decode_cache "
+        f"and thread the family-specific state (ssm/conv, hybrid blocks, "
+        f"audio cross-KV) explicitly")
 
 
 def generate(cfg, params, prompts, *, gen_len: int, chunk_size: int = 256,
@@ -74,6 +108,36 @@ def generate(cfg, params, prompts, *, gen_len: int, chunk_size: int = 256,
     return jnp.concatenate(out, axis=1)
 
 
+# ------------------------------------------------------------ engine path ---
+def serve_engine(cfg, params, prompts, *, gen_len: int, chunk_size: int,
+                 page_size: int = None):
+    """Run the batch through the continuous-batching engine. Returns
+    (tokens (B, gen_len), engine) — a thin client of `repro.serving`."""
+    from repro.serving import Engine, EngineConfig, trace_requests
+
+    B, T = prompts.shape
+    page_size = page_size or min(chunk_size, 16)
+    chunk_size = ss.round_up(chunk_size, page_size)
+    max_len = ss.round_up(T + gen_len, chunk_size)
+    maxp = ss.pages_needed(max_len, page_size)
+    ecfg = EngineConfig(
+        page_size=page_size,
+        pages_total=1 + B * maxp,
+        max_running=B,
+        prefill_chunk=chunk_size,
+        prefill_slots=1,
+        max_pages_per_req=maxp,
+    )
+    engine = Engine(cfg, params, ecfg)
+    reqs = trace_requests([T] * B, vocab_size=cfg.vocab_size,
+                          max_new_tokens=gen_len)
+    for i, r in enumerate(reqs):
+        r.prompt = np.asarray(prompts[i])
+    results = engine.run(reqs)
+    results.sort(key=lambda r: r.req_id)
+    return jnp.asarray([r.tokens for r in results], jnp.int32), engine
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
@@ -82,6 +146,8 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--chunk-size", type=int, default=32)
+    ap.add_argument("--static", action="store_true",
+                    help="static-batch reference path instead of the engine")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -93,8 +159,13 @@ def main(argv=None):
                                  (args.batch, args.prompt_len), 1,
                                  cfg.vocab_size)
     t0 = time.time()
-    toks = generate(cfg, params, prompts, gen_len=args.gen,
-                    chunk_size=args.chunk_size)
+    if args.static:
+        toks = generate(cfg, params, prompts, gen_len=args.gen,
+                        chunk_size=args.chunk_size)
+    else:
+        toks, engine = serve_engine(cfg, params, prompts, gen_len=args.gen,
+                                    chunk_size=args.chunk_size)
+        print(engine.summary())
     dt = time.time() - t0
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")

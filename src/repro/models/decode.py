@@ -10,6 +10,14 @@ decode_step writes the new token's K/V at slot ``cache_len`` and attends to
 slots ``<= cache_len``. Sliding-window layers (gemma2 local) mask by position
 distance — the cache stays full-size in the baseline (see EXPERIMENTS.md §Perf
 for the ring-buffer optimization).
+
+Paged variant (the serving engine's cache, attention families only):
+  {"k","v": (L, pages_total, page_size, Hkv, hd)}          + per-request
+  (B,) cache_lens and (B, n_pages_per_req) page tables. `decode_step_paged`
+  scatters each request's new K/V into page ``table[b, len // P]`` at offset
+  ``len % P`` and attends through the table — per-request lengths come for
+  free, and pool memory is fixed at ``pages_total * page_size`` slots no
+  matter how long any one request runs.
 """
 from __future__ import annotations
 
@@ -72,6 +80,117 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
         c["cv"] = jnp.zeros_like(c["ck"])
         return c
     raise ValueError(cfg.family)
+
+
+def init_paged_cache(cfg: ModelConfig, pages_total: int, page_size: int,
+                     dtype=None):
+    """Paged KV pool for `decode_step_paged`: (L, pages_total, page_size,
+    Hkv, hd) per K/V. Page 0 is the *null page* by convention — the allocator
+    (serving/kv_pages.py) never hands it out, padded page-table entries and
+    inactive request slots point at it."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"paged KV cache supports attention families (dense/moe/vlm); "
+            f"got {cfg.family!r} — use decode.init_decode_cache")
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, pages_total, page_size,
+             cfg.padded_num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _decode_attn_paged(p, x, cfg, k_pages, v_pages, cache_lens, page_tables,
+                       window, attn_softcap):
+    """x: (B,1,D); k/v_pages: (n_pages, page_size, Hkv, hd); cache_lens (B,);
+    page_tables (B, n_pages_per_req). Per-request cache lengths — request b
+    writes at slot ``cache_lens[b]`` and attends slots ``<= cache_lens[b]``
+    of its own pages. Returns (out (B,1,D), k_pages, v_pages)."""
+    from repro.core.statestore import page_slot
+    from repro.kernels.decode_attention import paged_decode_attention
+
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    page_size = k_pages.shape[1]
+    n_pages_per_req = page_tables.shape[1]
+
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, cfg.padded_num_heads, hd)
+    k = k.reshape(B, 1, cfg.padded_num_kv_heads, hd)
+    v = v.reshape(B, 1, cfg.padded_num_kv_heads, hd)
+
+    pos = cache_lens[:, None]                       # (B, 1) per-request
+    if cfg.rope_theta:
+        if cfg.mrope:
+            pos3 = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+            q = L.apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+            k = L.apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+
+    # scatter the new token's K/V into its page (requests own disjoint pages,
+    # inactive slots are routed to the null page 0 by the scheduler)
+    tbl_idx, offset = page_slot(cache_lens, page_size)
+    pages = jnp.take_along_axis(page_tables, tbl_idx[:, None], axis=1)[:, 0]
+    k_pages = k_pages.at[pages, offset].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pages, offset].set(v[:, 0].astype(v_pages.dtype))
+
+    if cfg.attn_backend in ("pallas", "pallas_interpret"):
+        out = paged_decode_attention(
+            q.transpose(0, 2, 1, 3), k_pages, v_pages, page_tables,
+            cache_lens, window=window, softcap=attn_softcap,
+            interpret=cfg.attn_backend == "pallas_interpret")
+        out = out.transpose(0, 2, 1, 3)             # (B, 1, Hq, hd)
+    else:
+        S = n_pages_per_req * page_size
+        keys = k_pages[page_tables].reshape(B, S, k_pages.shape[2], hd)
+        vals = v_pages[page_tables].reshape(B, S, v_pages.shape[2], hd)
+        slot = jnp.arange(S, dtype=jnp.int32)
+        valid = slot[None] <= cache_lens[:, None]
+        valid &= (cache_lens[:, None] - slot[None]) < window
+        mask = valid[:, None, :]                    # (B, 1, S)
+        out = L.sdpa(q, keys, vals, mask, attn_softcap=attn_softcap)
+    out = out.reshape(B, 1, cfg.padded_num_heads * hd) @ p["wo"]
+    return out, k_pages, v_pages
+
+
+def decode_step_paged(cfg: ModelConfig, params, cache, tokens, cache_lens,
+                      page_tables):
+    """One decode step through the paged KV pool.
+
+    tokens: (B,1) int32; cache_lens: (B,) int32 per-request write slots;
+    page_tables: (B, n_pages_per_req) int32. -> (logits (B,1,V), new_cache).
+    Unlike `decode_step`, batch rows advance independently — this is the
+    continuous-batching substrate (serving/engine.py).
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"decode_step_paged supports attention families (dense/moe/vlm); "
+            f"got {cfg.family!r} — use decode.decode_step")
+    x = params["embed"][tokens]
+    windows = jnp.asarray(_layer_windows(cfg))
+
+    def layer_fn(x, xs):
+        lp, window, kp, vp = xs
+        h, kp, vp = _decode_attn_paged(
+            lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, kp, vp,
+            cache_lens, page_tables, window, cfg.attn_softcap)
+        x = x + h
+        xn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.num_experts:
+            h2, _ = moe_lib.moe_layer(lp["moe"], xn, cfg)
+        else:
+            h2 = L.swiglu_mlp(lp["mlp"], xn)
+        return x + h2, (kp, vp)
+
+    x, (nk, nv) = jax.lax.scan(
+        layer_fn, x, (params["layers"], windows, cache["k"], cache["v"]))
+    logits = _unembed(cfg, params, L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+    return logits, {"k": nk, "v": nv}
 
 
 def _decode_attn(p, x, cfg, cache_k, cache_v, cache_len, window,

@@ -1,0 +1,14 @@
+"""Continuous-batching serving engine (ChunkFlow chunks meet an online
+workload).
+
+    frontend   — Request/RequestResult dataclasses, Poisson/trace arrival
+                 simulation, streaming token callbacks
+    kv_pages   — paged KV pool free-list allocator (StateStore page layout)
+    scheduler  — FCFS admission + token-work prefill packer + preemption
+    engine     — the single-jit static-shape engine step + host tick loop
+"""
+from repro.serving.engine import Engine, TRACE_EVENTS, reset_trace_log  # noqa: F401
+from repro.serving.frontend import (Request, RequestResult,  # noqa: F401
+                                    poisson_requests, trace_requests)
+from repro.serving.kv_pages import NULL_PAGE, PagePool  # noqa: F401
+from repro.serving.scheduler import EngineConfig, Scheduler  # noqa: F401

@@ -1,0 +1,241 @@
+"""Continuous-batching engine: ONE jitted, static-shape step per tick.
+
+Every tick spends a fixed token budget on the same-shaped work regardless of
+what requests are in flight:
+
+  * ``max_running`` decode rows — one token per running request through
+    `models.decode.decode_step_paged` (per-request cache lengths + page
+    tables; idle rows point at the null page and are masked);
+  * ``prefill_slots`` chunk rows of ``prefill_chunk`` tokens — ChunkFlow
+    chunks of admitted prompts run through `models.api.forward` against a
+    capacity-padded prefix *gathered through the page table*, and their new
+    K/V is scattered back into whole pages (chunk size is a multiple of the
+    page size, so chunks and pages tile each other exactly).
+
+Because admission, packing and preemption all happen host-side in the
+scheduler, the device function's shapes depend only on EngineConfig — the
+step compiles exactly once (see TRACE_EVENTS) and peak KV memory is the pool
+allocation ``pages_total * page_size`` slots, independent of the longest
+prompt in the trace.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api, decode
+from repro.serving.kv_pages import PagePool
+from repro.serving.scheduler import EngineConfig, Scheduler
+
+TRACE_EVENTS = []       # one entry per Python trace of the engine step
+
+
+def reset_trace_log():
+    TRACE_EVENTS.clear()
+
+
+class Engine:
+    def __init__(self, cfg, params, ecfg: EngineConfig = None, dtype=None):
+        ecfg = ecfg or EngineConfig()
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                f"serving engine supports attention families (dense/moe/vlm);"
+                f" got {cfg.family!r}")
+        ecfg.validate()
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.cache = decode.init_paged_cache(cfg, ecfg.pages_total,
+                                             ecfg.page_size, dtype)
+        self.pool = PagePool(ecfg.pages_total)
+        self.sched = Scheduler(ecfg, self.pool)
+        self.now = 0.0
+        self.ticks = 0
+        self.stats = {"decode_tokens": 0, "prefill_tokens": 0,
+                      "prefill_pad_tokens": 0, "empty_ticks": 0}
+        self._step = self._build_step()
+
+    # ------------------------------------------------------------ device ----
+    @property
+    def kv_pool_bytes(self) -> int:
+        """Peak KV memory — fixed at construction, never grows."""
+        return self.cache["k"].nbytes + self.cache["v"].nbytes
+
+    def _build_step(self):
+        cfg, ecfg = self.cfg, self.ecfg
+        R, C, S = ecfg.max_running, ecfg.prefill_chunk, ecfg.prefill_slots
+        maxp, ps = ecfg.max_pages_per_req, ecfg.page_size
+        Kpre = maxp * ps                  # static prefix capacity (gathered)
+        npg = C // ps                     # whole pages per prefill chunk
+
+        def prefill_one(params, kp, vp, tok, pos, seg, table, prefix_len,
+                        last_idx):
+            """One (1, C) ChunkFlow chunk against a page-gathered prefix.
+            Inactive slots (all-zero table, seg=0) compute garbage that only
+            ever lands on the null page."""
+            Lk, H, hd = kp.shape[0], kp.shape[3], kp.shape[4]
+            pk = kp[:, table].reshape(Lk, 1, Kpre, H, hd)
+            pv = vp[:, table].reshape(Lk, 1, Kpre, H, hd)
+            slots_abs = jnp.arange(Kpre, dtype=jnp.int32)
+            st = {"k": pk, "v": pv, "pos": slots_abs[None],
+                  "seg": (slots_abs < prefix_len).astype(jnp.int32)[None]}
+            positions = pos[None]
+            if cfg.mrope:
+                positions = jnp.stack([positions] * 3, -1)
+            batch = {"tokens": tok[None], "segment_ids": seg[None],
+                     "positions": positions}
+            logits, new_state, _ = api.forward(cfg, params, batch, st)
+            own_k = new_state["k"][:, 0, Kpre:]          # (L, C, H, hd)
+            own_v = new_state["v"][:, 0, Kpre:]
+            pages = jax.lax.dynamic_slice(table, (prefix_len // ps,), (npg,))
+            kp = kp.at[:, pages].set(
+                own_k.reshape(Lk, npg, ps, H, hd).astype(kp.dtype))
+            vp = vp.at[:, pages].set(
+                own_v.reshape(Lk, npg, ps, H, hd).astype(vp.dtype))
+            nxt = jnp.argmax(logits[0, last_idx]).astype(jnp.int32)
+            return kp, vp, nxt
+
+        def step(params, kp, vp, dec_tok, dec_lens, dec_tables,
+                 pre_tok, pre_pos, pre_seg, pre_tables, pre_prefix,
+                 pre_last):
+            TRACE_EVENTS.append(("engine_step", R, C, S))
+            nxts = []
+            for s in range(S):            # static unroll over chunk slots
+                kp, vp, nxt = prefill_one(params, kp, vp, pre_tok[s],
+                                          pre_pos[s], pre_seg[s],
+                                          pre_tables[s], pre_prefix[s],
+                                          pre_last[s])
+                nxts.append(nxt)
+            pre_next = (jnp.stack(nxts) if nxts
+                        else jnp.zeros((0,), jnp.int32))
+            logits, cache = decode.decode_step_paged(
+                cfg, params, {"k": kp, "v": vp}, dec_tok, dec_lens,
+                dec_tables)
+            dec_next = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            return cache["k"], cache["v"], dec_next, pre_next
+
+        # pool buffers are donated where the backend supports it (CPU doesn't
+        # implement donation and would warn on every dispatch)
+        donate = (1, 2) if jax.default_backend() != "cpu" else ()
+        return jax.jit(step, donate_argnums=donate)
+
+    # -------------------------------------------------------------- host ----
+    def submit(self, req):
+        return self.sched.submit(req, self.now)
+
+    def tick(self, now: float = None) -> bool:
+        """One engine tick. Returns True if any work was scheduled."""
+        self.now = float(now) if now is not None else self.now + 1.0
+        self.sched.admit(self.now)
+        plan = self.sched.plan_tick(self.now)
+        if not plan.decode and not plan.prefill:
+            # idle (e.g. waiting on arrivals): don't burn a full device step
+            self.ticks += 1
+            self.stats["empty_ticks"] += 1
+            return False
+        e = self.ecfg
+        R, C, S, maxp = (e.max_running, e.prefill_chunk, e.prefill_slots,
+                         e.max_pages_per_req)
+
+        dec_tok = np.zeros((R, 1), np.int32)
+        dec_lens = np.zeros((R,), np.int32)
+        dec_tables = np.zeros((R, maxp), np.int32)
+        for s in plan.decode:
+            dec_tok[s.slot, 0] = s.generated[-1]
+            dec_lens[s.slot] = s.cache_len
+            dec_tables[s.slot, :len(s.pages)] = s.pages
+
+        pre_tok = np.zeros((S, C), np.int32)
+        pre_pos = np.zeros((S, C), np.int32)
+        pre_seg = np.zeros((S, C), np.int32)
+        pre_tables = np.zeros((S, maxp), np.int32)
+        pre_prefix = np.zeros((S,), np.int32)
+        pre_last = np.zeros((S,), np.int32)
+        for i, (s, start, n_real) in enumerate(plan.prefill):
+            ext = s.ext_prompt
+            pre_tok[i, :n_real] = ext[start:start + n_real]
+            pre_pos[i] = start + np.arange(C)
+            pre_seg[i, :n_real] = 1
+            pre_tables[i, :len(s.pages)] = s.pages
+            pre_prefix[i] = start
+            pre_last[i] = n_real - 1
+
+        k, v, dec_next, pre_next = self._step(
+            self.params, self.cache["k"], self.cache["v"],
+            jnp.asarray(dec_tok), jnp.asarray(dec_lens),
+            jnp.asarray(dec_tables), jnp.asarray(pre_tok),
+            jnp.asarray(pre_pos), jnp.asarray(pre_seg),
+            jnp.asarray(pre_tables), jnp.asarray(pre_prefix),
+            jnp.asarray(pre_last))
+        self.cache = {"k": k, "v": v}
+
+        dec_next = np.asarray(dec_next)
+        pre_next = np.asarray(pre_next)
+        for s in plan.decode:
+            self.sched.commit_decode(s, int(dec_next[s.slot]), self.now)
+        for i, (s, start, n_real) in enumerate(plan.prefill):
+            self.sched.commit_prefill(s, start, n_real, int(pre_next[i]),
+                                      self.now)
+
+        self.ticks += 1
+        self.stats["decode_tokens"] += len(plan.decode)
+        self.stats["prefill_tokens"] += sum(n for _, _, n in plan.prefill)
+        self.stats["prefill_pad_tokens"] += sum(C - n
+                                                for _, _, n in plan.prefill)
+        return True
+
+    def warmup(self) -> None:
+        """Compile the engine step off the measured path (a null dispatch —
+        all rows idle, writes land on the null page, outputs discarded)."""
+        e = self.ecfg
+        z = np.zeros
+        self._step(self.params, self.cache["k"], self.cache["v"],
+                   jnp.asarray(z((e.max_running, 1), np.int32)),
+                   jnp.asarray(z((e.max_running,), np.int32)),
+                   jnp.asarray(z((e.max_running, e.max_pages_per_req),
+                                 np.int32)),
+                   jnp.asarray(z((e.prefill_slots, e.prefill_chunk),
+                                 np.int32)),
+                   jnp.asarray(z((e.prefill_slots, e.prefill_chunk),
+                                 np.int32)),
+                   jnp.asarray(z((e.prefill_slots, e.prefill_chunk),
+                                 np.int32)),
+                   jnp.asarray(z((e.prefill_slots, e.max_pages_per_req),
+                                 np.int32)),
+                   jnp.asarray(z((e.prefill_slots,), np.int32)),
+                   jnp.asarray(z((e.prefill_slots,), np.int32)))
+
+    def run(self, requests, *, clock: str = "ticks",
+            max_ticks: int = 1_000_000) -> list:
+        """Feed ``requests`` by arrival time and tick until all complete.
+
+        clock="ticks": simulated time, 1.0 per tick (arrival_time in ticks —
+        deterministic, what the tests use). clock="wall": wall seconds
+        (arrival_time in seconds — what the latency benchmark uses).
+        """
+        assert clock in ("ticks", "wall")
+        pending = sorted(requests, key=lambda r: (r.arrival_time, r.req_id))
+        results, i = [], 0
+        t0 = time.perf_counter()
+        while i < len(pending) or not self.sched.idle:
+            if self.ticks >= max_ticks:
+                raise RuntimeError(f"engine exceeded max_ticks={max_ticks}")
+            now = (self.ticks + 1.0 if clock == "ticks"
+                   else time.perf_counter() - t0)
+            while i < len(pending) and pending[i].arrival_time <= now:
+                results.append(self.submit(pending[i]))
+                i += 1
+            if not self.tick(now) and clock == "wall":
+                time.sleep(1e-3)             # idle: wait for arrivals
+        return results
+
+    def summary(self) -> dict:
+        return {
+            "ticks": self.ticks,
+            "token_budget_per_tick": self.ecfg.token_budget,
+            "kv_pool_bytes": self.kv_pool_bytes,
+            "kv_pages_peak_in_use": self.pool.peak_in_use,
+            "n_preemptions": self.sched.n_preemptions,
+            **self.stats,
+        }

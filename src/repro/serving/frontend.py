@@ -1,0 +1,110 @@
+"""Serving frontend: request/response types + arrival simulation.
+
+Requests carry an optional streaming callback ``on_token(req_id, token)``
+fired as each greedy token materialises on the host. Arrival processes:
+
+  * `trace_requests`  — fixed (lengths, arrival_times) traces, the
+                        reproducible input for equivalence tests;
+  * `poisson_requests`— Poisson arrivals with prompt lengths drawn from the
+                        paper's long-tail CDFs via the shared
+                        `core.chunking.sample_lengths` helper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.chunking import sample_lengths
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                       # (T,) int32 token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    on_token: Optional[Callable[[int, int], None]] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.prompt.size >= 1, "empty prompt"
+        assert self.max_new_tokens >= 1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    req_id: int
+    prompt_len: int
+    t_arrival: float
+    tokens: list = dataclasses.field(default_factory=list)
+    t_admitted: float = math.nan
+    t_first_token: float = math.nan
+    t_finish: float = math.nan
+    n_preemptions: int = 0
+
+    @property
+    def done(self) -> bool:
+        return not math.isnan(self.t_finish)
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (arrival -> first generated token)."""
+        return self.t_first_token - self.t_arrival
+
+    @property
+    def e2e_latency(self) -> float:
+        return self.t_finish - self.t_arrival
+
+
+def trace_requests(lengths, *, vocab_size: int, max_new_tokens: int = 16,
+                   arrival_times=None, seed: int = 0,
+                   on_token=None) -> list:
+    """Fixed trace: one request per entry of ``lengths``. Deterministic
+    prompts (seeded), arrivals default to all-at-once at t=0."""
+    rng = np.random.RandomState(seed)
+    if arrival_times is None:
+        arrival_times = [0.0] * len(lengths)
+    assert len(arrival_times) == len(lengths)
+    return [
+        Request(req_id=i,
+                prompt=rng.randint(1, vocab_size, size=int(l)).astype(np.int32),
+                max_new_tokens=max_new_tokens,
+                arrival_time=float(t), on_token=on_token)
+        for i, (l, t) in enumerate(zip(lengths, arrival_times))
+    ]
+
+
+def poisson_requests(n: int, rate: float, *, vocab_size: int,
+                     dist="paper_eval", seed: int = 0,
+                     max_new_tokens: int = 16, min_len: int = 16,
+                     max_prompt: Optional[int] = None,
+                     on_token=None) -> list:
+    """``n`` requests with exponential inter-arrival gaps (``rate`` req/s of
+    simulated time) and long-tail prompt lengths from the paper's CDFs."""
+    assert rate > 0
+    lengths = sample_lengths(dist, n, seed, min_len=min_len,
+                             max_len=max_prompt)
+    rng = np.random.RandomState(seed + 1)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return trace_requests(lengths, vocab_size=vocab_size,
+                          max_new_tokens=max_new_tokens,
+                          arrival_times=arrivals.tolist(), seed=seed + 2,
+                          on_token=on_token)
+
+
+def latency_percentiles(results, pcts=(50, 99)) -> dict:
+    """Summarise finished RequestResults -> {metric: {p50: ..., p99: ...}}."""
+    done = [r for r in results if r.done]
+    out = {"n_done": len(done)}
+    for name, vals in [("ttft", [r.ttft for r in done]),
+                       ("e2e", [r.e2e_latency for r in done])]:
+        out[name] = {f"p{p}": float(np.percentile(vals, p)) if done else None
+                     for p in pcts}
+    return out

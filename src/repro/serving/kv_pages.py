@@ -1,0 +1,60 @@
+"""Paged KV-cache allocator — the StateStore page layout made dynamic.
+
+The device pool (`models.decode.init_paged_cache`) is a fixed array of
+``pages_total`` pages of ``page_size`` KV slots each; this module owns the
+*host-side* free list that maps requests onto it. Geometry (which page/offset
+a token lives at) is `core.statestore.pages_needed`/`page_slot` — shared with
+the kernels so scheduler, allocator and attention agree by construction.
+
+Page 0 is reserved as the NULL page: it is never allocated, padded
+page-table entries and inactive batch slots point at it, and the engine
+routes all masked/garbage writes there. Peak real usage is therefore bounded
+by ``pages_total - 1`` pages — the serving counterpart of ChunkFlow's
+"memory bounded by chunk size, not sequence length".
+"""
+from __future__ import annotations
+
+from collections import deque
+
+from repro.core.statestore import pages_needed  # noqa: F401  (re-export)
+
+NULL_PAGE = 0
+
+
+class PagePool:
+    """Free-list allocator over the device pool's page indices.
+
+    alloc() is all-or-nothing: a request either gets every page it asked for
+    or None (the scheduler then queues or preempts) — pages are never
+    oversubscribed and never handed out twice.
+    """
+
+    def __init__(self, pages_total: int):
+        assert pages_total >= 2, "need at least the null page + one real page"
+        self.pages_total = pages_total
+        self._free = deque(range(1, pages_total))
+        self._held = set()
+        self.peak_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._held)
+
+    def alloc(self, n: int):
+        """-> list of ``n`` page ids, or None if the pool can't satisfy it."""
+        if n < 0 or n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        self._held.update(pages)
+        self.peak_in_use = max(self.peak_in_use, len(self._held))
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            assert p in self._held, f"double free / foreign page {p}"
+            self._held.discard(p)
+            self._free.append(p)

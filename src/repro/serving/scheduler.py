@@ -1,0 +1,288 @@
+"""Chunk-centric admission scheduler for the continuous-batching engine.
+
+Responsibilities (all host-side, pure Python — the device step stays
+static-shape and compiled once):
+
+  * FCFS admission: a waiting request is admitted when a batch slot is free
+    AND the page pool can hold its chunk-padded prompt. Strict FCFS — the
+    head of the queue blocks later arrivals (no head-of-line bypass), which
+    keeps admission order deterministic for the equivalence tests.
+  * Prefill packing: each tick has ``prefill_slots`` chunk slots of
+    ``prefill_chunk`` tokens and a token-work budget; the packer charges
+    decode first (one token per running request, quadratic in context via
+    `core.dp_balance.chunk_token_work`) and rides prefill chunks along FCFS
+    until the budget is spent. ChunkFlow's Algorithm-2 phase 1 *is* the
+    prefill: chunk ``i`` of a prompt attends to the ``i*C`` prefix already
+    scattered into its pages.
+  * Decode growth + preemption: before a request decodes into a fresh page,
+    one page is allocated; if the pool is exhausted the *youngest* admitted
+    request is preempted — its pages are released and it re-queues at the
+    front (resume-by-recompute: prompt + generated tokens re-prefill, greedy
+    decode regenerates identically). KV pages are therefore never
+    oversubscribed, by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+from repro.core.dp_balance import chunk_token_work
+from repro.core.statestore import pages_needed, round_up
+from repro.serving.frontend import Request, RequestResult
+from repro.serving.kv_pages import PagePool
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine geometry — everything the jitted step's shapes depend
+    on. One EngineConfig == one compile."""
+    page_size: int = 16            # KV slots per page
+    pages_total: int = 128         # pool pages incl. the reserved null page 0
+    max_running: int = 4           # decode batch slots (R)
+    prefill_chunk: int = 32        # tokens per prefill chunk slot (C)
+    prefill_slots: int = 1         # prefill chunks that can ride along a tick
+    max_pages_per_req: int = 32    # page-table width (max_model_len / page)
+    mixed: bool = True             # False = prefill stalls decode (baseline)
+    tick_work_budget: Optional[float] = None   # token-work cap per tick
+
+    @property
+    def max_model_len(self) -> int:
+        return self.max_pages_per_req * self.page_size
+
+    @property
+    def token_budget(self) -> int:
+        """Upper bound on tokens processed per tick (decode + prefill)."""
+        return self.max_running + self.prefill_slots * self.prefill_chunk
+
+    def validate(self):
+        assert self.page_size >= 1 and self.pages_total >= 2
+        assert self.max_running >= 1 and self.prefill_slots >= 0
+        assert self.prefill_chunk >= 1
+        assert self.prefill_chunk % self.page_size == 0, \
+            "prefill_chunk must be a whole number of pages (chunk scatter " \
+            "writes full pages)"
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Waiting-queue entry. ``generated`` is non-empty for preempted
+    requests being resumed: their effective prompt is prompt + generated."""
+    req: Request
+    result: RequestResult
+    generated: list
+
+    @property
+    def ext_len(self) -> int:
+        return self.req.prompt_len + len(self.generated)
+
+
+@dataclasses.dataclass
+class SlotState:
+    slot: int
+    req: Request
+    result: RequestResult
+    generated: list                # tokens emitted so far (survives preempt)
+    pages: list                    # owned pool pages, table order
+    admit_seq: int                 # admission order (preemption priority)
+    prefill_target: int            # tokens to prefill = prompt+generated at
+                                   # admission (frozen: `generated` grows)
+    phase: str = "prefill"         # "prefill" | "decode"
+    prefill_done: int = 0          # tokens of ext prompt already prefilled
+    _decoded: int = 0              # KV slots written by decode since admission
+
+    @property
+    def ext_prompt(self):
+        import numpy as np
+        gen = self.generated[:self.prefill_target - self.req.prompt_len]
+        if not gen:
+            return self.req.prompt
+        return np.concatenate([self.req.prompt,
+                               np.asarray(gen, self.req.prompt.dtype)])
+
+    @property
+    def cache_len(self) -> int:
+        """Decode write slot: prefilled extent + decode tokens written."""
+        return self.prefill_target + self._decoded
+
+
+@dataclasses.dataclass
+class TickPlan:
+    decode: list                   # [SlotState] decoding this tick
+    prefill: list                  # [(SlotState, start, n_real)] chunks
+
+
+class Scheduler:
+    def __init__(self, ecfg: EngineConfig, pool: PagePool):
+        ecfg.validate()
+        self.ecfg = ecfg
+        self.pool = pool
+        self.waiting = deque()
+        self.slots = [None] * ecfg.max_running
+        self.finished = []
+        self._admit_seq = 0
+        self.n_preemptions = 0
+
+    # ------------------------------------------------------------ intake ----
+    def _required_pages(self, pending: _Pending) -> int:
+        """Worst-case pages the request can ever hold: its chunk-padded
+        extended prompt plus every generated token."""
+        worst = pending.req.prompt_len + pending.req.max_new_tokens
+        padded = round_up(worst, self.ecfg.prefill_chunk)
+        return pages_needed(padded, self.ecfg.page_size)
+
+    def submit(self, req: Request, now: float) -> RequestResult:
+        result = RequestResult(req_id=req.req_id, prompt_len=req.prompt_len,
+                               t_arrival=req.arrival_time or now)
+        pending = _Pending(req, result, [])
+        need = self._required_pages(pending)
+        if need > min(self.ecfg.max_pages_per_req, self.pool.pages_total - 1):
+            raise ValueError(
+                f"request {req.req_id} needs {need} pages "
+                f"(prompt {req.prompt_len} + gen {req.max_new_tokens}) but the "
+                f"engine caps at min(max_pages_per_req="
+                f"{self.ecfg.max_pages_per_req}, pool="
+                f"{self.pool.pages_total - 1})")
+        self.waiting.append(pending)
+        return result
+
+    # --------------------------------------------------------- admission ----
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def admit(self, now: float) -> int:
+        """FCFS: admit from the queue head while a slot + pages exist."""
+        n = 0
+        while self.waiting:
+            slot_id = self._free_slot()
+            if slot_id is None:
+                break
+            pending = self.waiting[0]
+            padded = round_up(pending.ext_len, self.ecfg.prefill_chunk)
+            pages = self.pool.alloc(pages_needed(padded, self.ecfg.page_size))
+            if pages is None:
+                break                        # head blocks (strict FCFS)
+            self.waiting.popleft()
+            if pending.result.t_admitted != pending.result.t_admitted:  # nan
+                pending.result.t_admitted = now
+            self.slots[slot_id] = SlotState(
+                slot=slot_id, req=pending.req, result=pending.result,
+                generated=pending.generated, pages=pages,
+                admit_seq=self._admit_seq, prefill_target=pending.ext_len)
+            self._admit_seq += 1
+            n += 1
+        return n
+
+    # -------------------------------------------------------- preemption ----
+    def _preempt(self, slot: SlotState, now: float) -> None:
+        """Release everything; resume later from prompt + generated."""
+        self.pool.free(slot.pages)
+        self.slots[slot.slot] = None
+        slot.result.n_preemptions += 1
+        self.n_preemptions += 1
+        self.waiting.appendleft(_Pending(slot.req, slot.result,
+                                         list(slot.generated)))
+
+    def _preempt_youngest(self, exclude, now: float) -> bool:
+        victims = [s for s in self.slots
+                   if s is not None and s is not exclude]
+        if not victims:
+            return False
+        self._preempt(max(victims, key=lambda s: s.admit_seq), now)
+        return True
+
+    def _ensure_decode_page(self, slot: SlotState, now: float) -> bool:
+        """Make sure the page holding write-slot ``cache_len`` exists. May
+        preempt younger requests — or ``slot`` itself if it is the youngest
+        and the pool is dry. Returns False if ``slot`` was preempted."""
+        need_idx = slot.cache_len // self.ecfg.page_size
+        while need_idx >= len(slot.pages):
+            got = self.pool.alloc(1)
+            if got is not None:
+                slot.pages.extend(got)
+                continue
+            if not self._preempt_youngest(exclude=slot, now=now):
+                self._preempt(slot, now)     # youngest itself: requeue whole
+                return False
+        return True
+
+    # ----------------------------------------------------------- packing ----
+    def _tick_budget(self) -> float:
+        if self.ecfg.tick_work_budget is not None:
+            return self.ecfg.tick_work_budget
+        e = self.ecfg
+        return (e.max_running * chunk_token_work(1, e.max_model_len)
+                + e.prefill_slots * chunk_token_work(e.prefill_chunk,
+                                                     e.max_model_len))
+
+    def plan_tick(self, now: float) -> TickPlan:
+        budget = self._tick_budget()
+        prefill_pending = sorted(
+            (s for s in self.slots if s is not None and s.phase == "prefill"),
+            key=lambda s: s.admit_seq)
+
+        # decode set: oldest first so growth steals from the youngest
+        decode = []
+        if self.ecfg.mixed or not prefill_pending:
+            for s in sorted((s for s in self.slots
+                             if s is not None and s.phase == "decode"),
+                            key=lambda s: s.admit_seq):
+                if self._ensure_decode_page(s, now):
+                    decode.append(s)
+            # preemption may have emptied slots mid-iteration
+            decode = [s for s in decode if self.slots[s.slot] is s]
+        work = sum(chunk_token_work(1, s.cache_len) for s in decode)
+
+        # prefill chunks ride along FCFS under the remaining budget
+        prefill = []
+        C = self.ecfg.prefill_chunk
+        for s in prefill_pending:
+            if self.slots[s.slot] is not s:
+                continue                     # preempted by decode growth
+            if len(prefill) >= self.ecfg.prefill_slots:
+                break
+            start = s.prefill_done
+            n_real = min(C, s.prefill_target - start)
+            w = chunk_token_work(n_real, start)
+            if work + w > budget and (prefill or decode):
+                break                        # budget spent; keep FCFS order
+            prefill.append((s, start, n_real))
+            work += w
+        return TickPlan(decode=decode, prefill=prefill)
+
+    # ------------------------------------------------------- tick commit ----
+    def _emit(self, slot: SlotState, token: int, now: float) -> None:
+        if not slot.generated:
+            slot.result.t_first_token = now
+        slot.generated.append(token)
+        slot.result.tokens.append(token)
+        if slot.req.on_token is not None:
+            slot.req.on_token(slot.req.req_id, token)
+        if len(slot.generated) >= slot.req.max_new_tokens:
+            slot.result.t_finish = now
+            self.pool.free(slot.pages)
+            self.slots[slot.slot] = None
+            self.finished.append(slot.result)
+
+    def commit_decode(self, slot: SlotState, token: int, now: float) -> None:
+        slot._decoded += 1
+        self._emit(slot, token, now)
+
+    def commit_prefill(self, slot: SlotState, start: int, n_real: int,
+                       next_token: int, now: float) -> None:
+        slot.prefill_done = start + n_real
+        if slot.prefill_done >= slot.prefill_target:
+            slot.phase = "decode"
+            self._emit(slot, next_token, now)   # final chunk's greedy token
+
+    # ------------------------------------------------------------- state ----
+    @property
+    def n_running(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and self.n_running == 0

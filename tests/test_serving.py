@@ -104,6 +104,37 @@ def test_generate_end_to_end():
     assert (a >= 0).all() and (a < cfg.vocab_size).all()
 
 
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_state_to_cache_dense_moe_conversion(family):
+    """The prefill state lands verbatim in the decode cache's first P slots;
+    the rest stays zero."""
+    kw = dict(num_experts=4, experts_per_token=2) if family == "moe" else {}
+    cfg = tiny_dense(family=family, **kw)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 24), 1,
+                              cfg.vocab_size)
+    _, state = chunked_prefill(cfg, params, toks, chunk_size=16)
+    max_seq = 40
+    cache, P = state_to_cache(cfg, params, state, max_seq, 2)
+    assert P == 24
+    assert cache["k"].shape[2] == max_seq
+    for leaf in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(cache[leaf][:, :, :P]),
+                                      np.asarray(state[leaf]))
+        assert not np.asarray(cache[leaf][:, :, P:]).any()
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "jamba-1.5-large-398b",
+                                  "whisper-small"])
+def test_state_to_cache_rejects_non_attention_families(arch):
+    """ssm/hybrid/audio states don't map onto the dense KV cache — a loud
+    NotImplementedError pointing at decode.init_decode_cache, not a silent
+    wrong conversion."""
+    cfg = ARCHS[arch].reduced()
+    with pytest.raises(NotImplementedError, match="init_decode_cache"):
+        state_to_cache(cfg, None, {}, 16, 1)
+
+
 def test_ring_cache_matches_full_cache():
     """Sliding-window ring cache (gemma2-style local/global) produces the
     same decode logits as the full-size cache at half the local-cache bytes."""
