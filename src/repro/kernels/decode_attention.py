@@ -192,9 +192,10 @@ def paged_decode_attention(q, k_pages, v_pages, page_tables, cache_lens, *,
     G = Hq // Hkv
     grid = (B, Hq, n_pages_per_req)
 
-    if isinstance(window, int):
-        window = window if window > 0 else BIG_WINDOW
+    # 0 -> "global" for traced windows too (a traced zero would otherwise
+    # mask every slot via (cache_len - slot) < 0)
     win = jnp.asarray(window, jnp.int32).reshape(1)
+    win = jnp.where(win > 0, win, BIG_WINDOW).astype(jnp.int32)
 
     kernel = functools.partial(
         _paged_decode_kernel, scale=1.0 / (D ** 0.5),

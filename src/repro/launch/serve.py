@@ -68,10 +68,12 @@ def chunked_prefill(cfg, params, tokens, chunk_size: int):
 def state_to_cache(cfg, params, state, max_seq: int, batch: int):
     """Convert the prefill chunk-state into a fixed-size decode cache.
 
-    Only attention families carry a (L, B, S, Hkv, hd) K/V state that maps
-    onto the dense decode cache. Recurrent / hybrid / enc-dec states need
-    family-specific plumbing (`decode.init_decode_cache` documents each
-    layout); converting them here would silently drop conv tails / cross-KV.
+    Attention families carry a (L, B, S, Hkv, hd) K/V state that maps onto
+    the dense decode cache. The ssm recurrent state has no sequence axis —
+    it already *is* the decode cache (tests/test_serving.py), so it passes
+    through unchanged. Hybrid / enc-dec states need family-specific plumbing
+    (`decode.init_decode_cache` documents each layout); converting them here
+    would silently drop conv tails / cross-KV.
     """
     if cfg.family in ("dense", "moe", "vlm"):
         cache = decode.init_decode_cache(cfg, batch, max_seq)
@@ -81,11 +83,13 @@ def state_to_cache(cfg, params, state, max_seq: int, batch: int):
         cache["v"] = jax.lax.dynamic_update_slice_in_dim(
             cache["v"], state["v"].astype(cache["v"].dtype), 0, axis=2)
         return cache, P
+    if cfg.family == "ssm":
+        return state, 0
     raise NotImplementedError(
-        f"state_to_cache only supports attention families (dense/moe/vlm); "
-        f"got {cfg.family!r} — build the cache with decode.init_decode_cache "
-        f"and thread the family-specific state (ssm/conv, hybrid blocks, "
-        f"audio cross-KV) explicitly")
+        f"state_to_cache only supports attention (dense/moe/vlm) and ssm "
+        f"families; got {cfg.family!r} — build the cache with "
+        f"decode.init_decode_cache and thread the family-specific state "
+        f"(hybrid blocks, audio cross-KV) explicitly")
 
 
 def generate(cfg, params, prompts, *, gen_len: int, chunk_size: int = 256,

@@ -187,24 +187,23 @@ class Engine:
 
     def warmup(self) -> None:
         """Compile the engine step off the measured path (a null dispatch —
-        all rows idle, writes land on the null page, outputs discarded)."""
+        all rows idle, writes land on the null page). The pool buffers are
+        donated to the step on accelerator backends, so the returned K/V must
+        be reinstalled as the live cache."""
         e = self.ecfg
         z = np.zeros
-        self._step(self.params, self.cache["k"], self.cache["v"],
-                   jnp.asarray(z((e.max_running, 1), np.int32)),
-                   jnp.asarray(z((e.max_running,), np.int32)),
-                   jnp.asarray(z((e.max_running, e.max_pages_per_req),
-                                 np.int32)),
-                   jnp.asarray(z((e.prefill_slots, e.prefill_chunk),
-                                 np.int32)),
-                   jnp.asarray(z((e.prefill_slots, e.prefill_chunk),
-                                 np.int32)),
-                   jnp.asarray(z((e.prefill_slots, e.prefill_chunk),
-                                 np.int32)),
-                   jnp.asarray(z((e.prefill_slots, e.max_pages_per_req),
-                                 np.int32)),
-                   jnp.asarray(z((e.prefill_slots,), np.int32)),
-                   jnp.asarray(z((e.prefill_slots,), np.int32)))
+        k, v, _, _ = self._step(
+            self.params, self.cache["k"], self.cache["v"],
+            jnp.asarray(z((e.max_running, 1), np.int32)),
+            jnp.asarray(z((e.max_running,), np.int32)),
+            jnp.asarray(z((e.max_running, e.max_pages_per_req), np.int32)),
+            jnp.asarray(z((e.prefill_slots, e.prefill_chunk), np.int32)),
+            jnp.asarray(z((e.prefill_slots, e.prefill_chunk), np.int32)),
+            jnp.asarray(z((e.prefill_slots, e.prefill_chunk), np.int32)),
+            jnp.asarray(z((e.prefill_slots, e.max_pages_per_req), np.int32)),
+            jnp.asarray(z((e.prefill_slots,), np.int32)),
+            jnp.asarray(z((e.prefill_slots,), np.int32)))
+        self.cache = {"k": k, "v": v}
 
     def run(self, requests, *, clock: str = "ticks",
             max_ticks: int = 1_000_000) -> list:
@@ -215,7 +214,8 @@ class Engine:
         (arrival_time in seconds — what the latency benchmark uses).
         """
         assert clock in ("ticks", "wall")
-        pending = sorted(requests, key=lambda r: (r.arrival_time, r.req_id))
+        arr = lambda r: r.arrival_time if r.arrival_time is not None else 0.0
+        pending = sorted(requests, key=lambda r: (arr(r), r.req_id))
         results, i = [], 0
         t0 = time.perf_counter()
         while i < len(pending) or not self.sched.idle:
@@ -223,7 +223,7 @@ class Engine:
                 raise RuntimeError(f"engine exceeded max_ticks={max_ticks}")
             now = (self.ticks + 1.0 if clock == "ticks"
                    else time.perf_counter() - t0)
-            while i < len(pending) and pending[i].arrival_time <= now:
+            while i < len(pending) and arr(pending[i]) <= now:
                 results.append(self.submit(pending[i]))
                 i += 1
             if not self.tick(now) and clock == "wall":

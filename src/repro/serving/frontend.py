@@ -25,7 +25,7 @@ class Request:
     req_id: int
     prompt: np.ndarray                       # (T,) int32 token ids
     max_new_tokens: int
-    arrival_time: float = 0.0
+    arrival_time: Optional[float] = None     # None = "when submitted"
     on_token: Optional[Callable[[int, int], None]] = None
 
     def __post_init__(self):

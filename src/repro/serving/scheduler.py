@@ -57,7 +57,10 @@ class EngineConfig:
 
     def validate(self):
         assert self.page_size >= 1 and self.pages_total >= 2
-        assert self.max_running >= 1 and self.prefill_slots >= 0
+        assert self.max_running >= 1
+        assert self.prefill_slots >= 1, \
+            "prefill is the only path to decode phase; prefill_slots=0 can " \
+            "never make progress"
         assert self.prefill_chunk >= 1
         assert self.prefill_chunk % self.page_size == 0, \
             "prefill_chunk must be a whole number of pages (chunk scatter " \
@@ -132,8 +135,10 @@ class Scheduler:
         return pages_needed(padded, self.ecfg.page_size)
 
     def submit(self, req: Request, now: float) -> RequestResult:
-        result = RequestResult(req_id=req.req_id, prompt_len=req.prompt_len,
-                               t_arrival=req.arrival_time or now)
+        result = RequestResult(
+            req_id=req.req_id, prompt_len=req.prompt_len,
+            t_arrival=req.arrival_time if req.arrival_time is not None
+            else now)
         pending = _Pending(req, result, [])
         need = self._required_pages(pending)
         if need > min(self.ecfg.max_pages_per_req, self.pool.pages_total - 1):
@@ -230,9 +235,11 @@ class Scheduler:
             for s in sorted((s for s in self.slots
                              if s is not None and s.phase == "decode"),
                             key=lambda s: s.admit_seq):
+                if self.slots[s.slot] is not s:
+                    continue             # preempted by an older slot's growth
                 if self._ensure_decode_page(s, now):
                     decode.append(s)
-            # preemption may have emptied slots mid-iteration
+            # growth can also preempt slots appended *earlier* in this loop
             decode = [s for s in decode if self.slots[s.slot] is s]
         work = sum(chunk_token_work(1, s.cache_len) for s in decode)
 

@@ -245,6 +245,36 @@ def test_scheduler_work_budget_limits_prefill():
     assert plan.prefill[0][0].req.req_id == 0
 
 
+def test_scheduler_decode_growth_skips_preempted_slots():
+    """An older slot's decode-page growth may preempt a younger slot that is
+    still in the decode iteration list; the orphaned slot must be skipped —
+    no spurious second preemption, no leaked pages."""
+    from repro.serving.scheduler import Scheduler
+    ecfg = EngineConfig(page_size=8, pages_total=3, max_running=2,
+                        prefill_chunk=8, prefill_slots=2, max_pages_per_req=3)
+    pool = PagePool(ecfg.pages_total)
+    sched = Scheduler(ecfg, pool)
+    for i in range(2):
+        sched.submit(Request(req_id=i, prompt=np.ones(8, np.int32),
+                             max_new_tokens=8), now=0.0)
+    assert sched.admit(0.0) == 2          # one page each; pool now dry
+    plan = sched.plan_tick(0.0)
+    assert len(plan.prefill) == 2
+    for s, start, n in plan.prefill:      # single-chunk prompts -> decode
+        sched.commit_prefill(s, start, n, next_token=1, now=0.0)
+    old, young = sorted(sched.slots, key=lambda s: s.admit_seq)
+    assert old.phase == young.phase == "decode"
+    plan = sched.plan_tick(1.0)
+    # old grows into the page freed by preempting young; orphaned young is
+    # skipped instead of preempting old back on behalf of a dead slot
+    assert plan.decode == [old]
+    assert sched.n_preemptions == 1
+    assert sched.slots[old.slot] is old
+    assert len(sched.waiting) == 1 and sched.waiting[0].req is young.req
+    assert pool.in_use == len(old.pages)  # no page attached to a dead slot
+    assert pool.free_pages + pool.in_use == ecfg.pages_total - 1
+
+
 def test_poisson_requests_long_tail():
     reqs = poisson_requests(64, rate=2.0, vocab_size=97, seed=3,
                             max_new_tokens=4, max_prompt=512)

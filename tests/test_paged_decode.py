@@ -82,15 +82,17 @@ def test_paged_kernel_matches_dense_reference_per_row():
                                    np.asarray(expect), rtol=2e-5, atol=2e-5)
 
 
-def test_paged_kernel_traced_window():
+@pytest.mark.parametrize("window", [24, 0])
+def test_paged_kernel_traced_window(window):
     """window may be a traced scalar (local/global alternation shares one
-    compile inside a layer scan)."""
+    compile inside a layer scan); a traced *zero* means global, exactly like
+    the static 0."""
     q, k, v, kp, vp, tbl = make_case(jax.random.PRNGKey(2), 2, 4, 2, 64, 16, 4)
     lens = jnp.asarray((40, 17), jnp.int32)
     out = jax.jit(
         lambda w: paged_decode_attention(q, kp, vp, tbl, lens, window=w,
-                                         interpret=True))(jnp.int32(24))
-    expect = paged_decode_attention_ref(q, kp, vp, tbl, lens, window=24)
+                                         interpret=True))(jnp.int32(window))
+    expect = paged_decode_attention_ref(q, kp, vp, tbl, lens, window=window)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                rtol=2e-5, atol=2e-5)
 

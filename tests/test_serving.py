@@ -124,15 +124,23 @@ def test_state_to_cache_dense_moe_conversion(family):
         assert not np.asarray(cache[leaf][:, :, P:]).any()
 
 
-@pytest.mark.parametrize("arch", ["mamba2-130m", "jamba-1.5-large-398b",
-                                  "whisper-small"])
-def test_state_to_cache_rejects_non_attention_families(arch):
-    """ssm/hybrid/audio states don't map onto the dense KV cache — a loud
+@pytest.mark.parametrize("arch", ["jamba-1.5-large-398b", "whisper-small"])
+def test_state_to_cache_rejects_hybrid_audio_families(arch):
+    """hybrid/audio states don't map onto the dense KV cache — a loud
     NotImplementedError pointing at decode.init_decode_cache, not a silent
     wrong conversion."""
     cfg = ARCHS[arch].reduced()
     with pytest.raises(NotImplementedError, match="init_decode_cache"):
         state_to_cache(cfg, None, {}, 16, 1)
+
+
+def test_state_to_cache_ssm_passthrough():
+    """The ssm recurrent state has no sequence axis — it IS the decode cache
+    and must pass through state_to_cache unchanged."""
+    cfg = ARCHS["mamba2-130m"].reduced()
+    state = {"ssm": object()}          # opaque: must come back identical
+    cache, P = state_to_cache(cfg, None, state, 16, 1)
+    assert cache is state and P == 0
 
 
 def test_ring_cache_matches_full_cache():
