@@ -1,0 +1,180 @@
+"""CI perf-regression gate over the BENCH_*.json payloads.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --current bench --baseline benchmarks/baselines \
+        [--threshold 0.15] [--require-all]
+
+Compares the freshly produced JSONs against the committed baselines and
+FAILS (exit 1) when a *gated* metric regresses by more than the threshold.
+Gated metrics are deterministic schedule/compile/state measurements —
+higher is worse for all of them:
+
+  * BENCH_pipeline.json: every scalar under ``gate`` (bubble ratio,
+    peak-state bytes and recompute count per K, total compile count);
+  * BENCH_attention.json: ``compile_counts.chunk_fn_compiles`` (the
+    static-shape StateStore's O(#buckets) compile guarantee).
+
+Everything else — walltimes, latencies, throughput, measured residual
+bytes — moves with the runner and the jax version, so it is printed
+report-only (still visible in the job log and in the artifact bundle).
+
+``--update`` rewrites the baselines from the current payloads (run locally
+when a change legitimately shifts a gated metric, and commit the diff).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+# file -> list of dotted paths to gate; a trailing ".*" gates every scalar
+# child of the addressed dict
+GATED = {
+    "BENCH_pipeline.json": ["gate.*"],
+    "BENCH_attention.json": ["compile_counts.chunk_fn_compiles"],
+    "BENCH_serving.json": [],          # latency/throughput: report-only
+}
+
+REPORT_ONLY_SUFFIXES = ("_us", "_s")
+REPORT_ONLY_HINTS = ("walltime", "ttft", "e2e", "latency", "throughput",
+                     "residual_bytes", "p50", "p99")
+
+
+def _resolve(payload, dotted: str):
+    """-> {full_path: scalar} for a dotted path (supports trailing '.*')."""
+    parts = dotted.split(".")
+    node = payload
+    for i, p in enumerate(parts):
+        if p == "*":
+            assert i == len(parts) - 1, dotted
+            prefix = ".".join(parts[:-1])
+            return {f"{prefix}.{k}": v for k, v in sorted(node.items())
+                    if isinstance(v, (int, float)) and not isinstance(v, bool)}
+        if not isinstance(node, dict) or p not in node:
+            return {}
+        node = node[p]
+    if isinstance(node, (int, float)) and not isinstance(node, bool):
+        return {dotted: node}
+    return {}
+
+
+def check_file(name: str, current_dir: str, baseline_dir: str,
+               threshold: float, require_all: bool):
+    """-> (failures, rows). rows: (metric, base, cur, status)."""
+    cur_path = os.path.join(current_dir, name)
+    base_path = os.path.join(baseline_dir, name)
+    if not os.path.exists(cur_path):
+        # CI (--require-all) treats a bench that didn't run/emit as a
+        # failure; locally you can gate a single fresh json against its
+        # baseline without producing the others
+        if require_all:
+            return [f"{name}: missing from --current {current_dir} "
+                    "(benchmark did not run or did not emit)"], []
+        print(f"  [skip] {name}: not in --current {current_dir}")
+        return [], []
+    if not os.path.exists(base_path):
+        return [f"{name}: no committed baseline at {base_path} "
+                "(run with --update and commit it)"], []
+    with open(cur_path) as f:
+        cur = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+
+    failures, rows = [], []
+    for dotted in GATED[name]:
+        base_m = _resolve(base, dotted)
+        cur_m = _resolve(cur, dotted)
+        for metric, bval in base_m.items():
+            if metric not in cur_m:
+                failures.append(f"{name}:{metric}: gated metric vanished")
+                continue
+            cval = cur_m[metric]
+            # higher is worse for every gated metric; tiny baselines use an
+            # absolute floor so 0 -> 0.1 noise can't divide by zero
+            limit = bval * (1.0 + threshold) + (1e-9 if bval else threshold)
+            status = "OK" if cval <= limit else "REGRESSED"
+            rows.append((f"{name}:{metric}", bval, cval, status))
+            if status != "OK":
+                failures.append(
+                    f"{name}:{metric}: {bval} -> {cval} "
+                    f"(> {threshold:.0%} regression)")
+    return failures, rows
+
+
+def report_only(name: str, current_dir: str, baseline_dir: str):
+    """Print walltime-ish scalars side by side, informational."""
+    cur_path = os.path.join(current_dir, name)
+    base_path = os.path.join(baseline_dir, name)
+    if not (os.path.exists(cur_path) and os.path.exists(base_path)):
+        return
+
+    def scalars(payload, prefix=""):
+        out = {}
+        if isinstance(payload, dict):
+            for k, v in payload.items():
+                out.update(scalars(v, f"{prefix}{k}."))
+        elif isinstance(payload, list):
+            for i, v in enumerate(payload):
+                out.update(scalars(v, f"{prefix}{i}."))
+        elif isinstance(payload, (int, float)) and not isinstance(
+                payload, bool):
+            key = prefix[:-1]
+            leaf = key.rsplit(".", 1)[-1].lower()
+            if (leaf.endswith(REPORT_ONLY_SUFFIXES)
+                    or any(h in key.lower() for h in REPORT_ONLY_HINTS)):
+                out[key] = payload
+        return out
+
+    with open(cur_path) as f:
+        cur = scalars(json.load(f))
+    with open(base_path) as f:
+        base = scalars(json.load(f))
+    for k in sorted(set(cur) & set(base)):
+        b, c = base[k], cur[k]
+        delta = (c - b) / b if b else 0.0
+        print(f"  [report-only] {name}:{k}: {b:.6g} -> {c:.6g} "
+              f"({delta:+.0%})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="bench")
+    ap.add_argument("--baseline", default="benchmarks/baselines")
+    ap.add_argument("--threshold", type=float, default=0.15)
+    ap.add_argument("--require-all", action="store_true",
+                    help="fail when any gated json is absent from --current "
+                         "(CI mode; default skips absent files)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy current payloads over the baselines")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        os.makedirs(args.baseline, exist_ok=True)
+        for name in GATED:
+            src = os.path.join(args.current, name)
+            if os.path.exists(src):
+                shutil.copy(src, os.path.join(args.baseline, name))
+                print(f"baseline updated: {name}")
+        return 0
+
+    all_failures = []
+    for name in GATED:
+        failures, rows = check_file(name, args.current, args.baseline,
+                                    args.threshold, args.require_all)
+        for metric, bval, cval, status in rows:
+            print(f"  [gate] {metric}: {bval:.6g} -> {cval:.6g} [{status}]")
+        report_only(name, args.current, args.baseline)
+        all_failures += failures
+    if all_failures:
+        print("\nPERF REGRESSION GATE FAILED:", file=sys.stderr)
+        for msg in all_failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print(f"\nperf gate OK ({args.threshold:.0%} threshold)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

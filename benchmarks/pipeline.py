@@ -1,0 +1,154 @@
+"""Executor-measured pipeline benchmark: bubble ratio + state bytes vs K.
+
+    PYTHONPATH=src python -m benchmarks.pipeline [--json-dir DIR]
+
+Runs the real 2D (data x pipe) K-retention rotation executor
+(distributed/pipeline.run_batch_pipelined) on a small dense model over a
+long-tail chunk stream, sweeping K, and reports per K:
+
+  * bubble ratio from the executor's own tick accounting (deterministic
+    integer math — the CI regression gate reads it);
+  * recompute counts and resident chunk-states;
+  * StateStore K/V bytes (deterministic) and the analytic peak-state-bytes
+    gate metric (StateStore + resident chunk-states in bytes);
+  * measured vjp residual bytes and walltime (report-only: they move with
+    the jax version / XLA partitioner, so they ride as informational);
+  * the simulate_rotation prediction for the same stream, with an
+    ``agrees`` flag (pinned true — apples-to-apples by construction).
+
+Needs multiple devices: when run as a script it re-execs itself with
+XLA_FLAGS=--xla_force_host_platform_device_count=4 (run from the repo root;
+benchmarks.run invokes it as a subprocess for the same reason).
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+DEVICE_COUNT = 4
+
+
+def _bench(json_dir: str) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs.base import ModelConfig
+    from repro.core import chunked_step, chunking
+    from repro.core.schedule_sim import simulate_rotation
+    from repro.distributed import pipeline
+    from repro.launch import mesh as mesh_lib
+    from repro.models import api
+
+    cfg = ModelConfig(name="bench-pipe", family="dense", num_layers=4,
+                      d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab_size=97, dtype="float32",
+                      rope_theta=10_000.0)
+    C = 32
+    data, pipe = 2, 2
+    mesh = mesh_lib.make_train_mesh(data, pipe)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+
+    # long-tail stream: one 8-chunk group (the paper's tail sequence), a
+    # 3-chunk group, and short sequences packing into standalone chunks
+    rng = np.random.RandomState(0)
+    lengths = {0: 8 * C - 5, 1: 3 * C, 2: 20, 3: 9, 4: 28, 5: 14, 6: 25}
+    seqs = {i: rng.randint(1, cfg.vocab_size, size=l).astype(np.int32)
+            for i, l in lengths.items()}
+    chunks = chunking.construct_chunks(lengths, C)
+    groups, standalone = chunking.group_chunks(chunks)
+    gb = [[chunking.materialize_chunk(c, seqs) for c in g]
+          for g in groups.values()]
+    sb = [chunking.materialize_chunk(c, seqs) for c in standalone]
+
+    kv_bytes_per_slot = (2 * cfg.num_layers * data * C
+                         * cfg.padded_num_kv_heads * cfg.resolved_head_dim
+                         * 4)                                  # k+v, fp32
+
+    sweep = []
+    for k in (1, 2, 4, 8):
+        pipeline.reset_pipe_trace_log()
+        t0 = time.perf_counter()
+        loss, grads, st = chunked_step.run_batch(cfg, params, gb, sb, k=k,
+                                                 mesh=mesh)
+        jax.block_until_ready(grads)
+        wall = time.perf_counter() - t0
+        sim = simulate_rotation(st.wave_sizes, pipe, k)
+        peak_state = (st.kv_store_bytes
+                      + st.max_live_residuals * kv_bytes_per_slot)
+        sweep.append({
+            "k": k,
+            "bubble_ratio": st.bubble_ratio,
+            "sim_bubble_ratio": sim.bubble_ratio,
+            "agrees": (abs(st.bubble_ratio - sim.bubble_ratio) < 1e-12
+                       and st.recompute_calls == sim.recompute_count
+                       and st.max_live_residuals
+                       == sim.peak_resident_chunks),
+            "recompute_chunks": st.recompute_calls,
+            "resident_chunk_states": st.max_live_residuals,
+            "kv_store_bytes": st.kv_store_bytes,
+            "peak_state_bytes": peak_state,
+            "residual_bytes_measured": st.peak_residual_bytes,
+            "compile_count": len(pipeline.PIPE_TRACE_EVENTS),
+            "wave_sizes": st.wave_sizes,
+            "loss": float(loss),
+            "walltime_s": wall,
+        })
+
+    gate = {}
+    for row in sweep:
+        gate[f"bubble_ratio_k{row['k']}"] = row["bubble_ratio"]
+        gate[f"peak_state_bytes_k{row['k']}"] = row["peak_state_bytes"]
+        gate[f"recompute_chunks_k{row['k']}"] = row["recompute_chunks"]
+    gate["compile_count_total"] = sum(r["compile_count"] for r in sweep)
+
+    payload = {
+        "mesh": {"data": data, "pipe": pipe},
+        "chunk_size": C,
+        "stream_lengths": {str(kk): v for kk, v in lengths.items()},
+        "kv_bytes_per_chunk_slot": kv_bytes_per_slot,
+        "sweep": sweep,
+        "gate": gate,
+        "note": "bubble/recompute/state metrics are deterministic integer "
+                "math (gated in CI); residual bytes and walltime depend on "
+                "the jax version and ride report-only",
+    }
+
+    print("k,bubble_ratio,sim_bubble,recompute,resident,peak_state_bytes,"
+          "residual_bytes,compiles,walltime_s")
+    for r in sweep:
+        print(f"{r['k']},{r['bubble_ratio']:.4f},"
+              f"{r['sim_bubble_ratio']:.4f},{r['recompute_chunks']},"
+              f"{r['resident_chunk_states']},{r['peak_state_bytes']},"
+              f"{r['residual_bytes_measured']},{r['compile_count']},"
+              f"{r['walltime_s']:.2f}")
+    assert all(r["agrees"] for r in sweep), \
+        "executor/simulator schedule accounting diverged"
+    return payload
+
+
+def emit(payload: dict, json_dir: str):
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, "BENCH_pipeline.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"[bench] wrote {path}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=".")
+    args = ap.parse_args(argv)
+    emit(_bench(args.json_dir), args.json_dir)
+
+
+if __name__ == "__main__":
+    if "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={DEVICE_COUNT}"
+        ).strip()
+        os.execv(sys.executable,
+                 [sys.executable, "-m", "benchmarks.pipeline"] + sys.argv[1:])
+    main()

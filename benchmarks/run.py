@@ -1,14 +1,22 @@
 """Benchmark harness — one section per paper table/figure + microbenchmarks.
 
-    PYTHONPATH=src python -m benchmarks.run [--json-dir DIR]
+    PYTHONPATH=src python -m benchmarks.run [--json-dir DIR] [--list]
+    PYTHONPATH=src python -m benchmarks.run --only dp_balance attention
 
-Sections that return a payload dict additionally emit it as
-``BENCH_<section>.json`` (the machine-readable flow CI and the roofline
-tooling consume); print-only sections emit nothing.
+Sections are declared in the SECTIONS registry below. Entries that emit a
+payload dict additionally write ``BENCH_<name>.json`` (the machine-readable
+flow CI's perf-regression gate and the roofline tooling consume);
+print-only sections emit nothing. ``--list`` imports and resolves every
+registered section without executing it, so a registration typo (module or
+attribute rename) fails the build instead of silently dropping a JSON —
+CI runs it as a smoke step.
 """
 import argparse
+import importlib
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -67,63 +75,113 @@ def micro_rows():
     return rows
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--json-dir", default=".",
-                    help="where BENCH_*.json payloads are written")
-    args = ap.parse_args(argv)
-
-    print("=" * 70)
-    print("## Tables 1-2: length distributions")
-    from benchmarks import length_distribution
-    length_distribution.run(n=20_000)
-
-    print("=" * 70)
-    print("## Figs 2/6/7: pipeline bubble ratios")
-    from benchmarks import bubble_ratio
-    bubble_ratio.run()
-
-    print("=" * 70)
-    print("## Fig 1 + Table 5: memory model")
-    from benchmarks import memory_model
-    memory_model.run()
-
-    print("=" * 70)
-    print("## Fig 8 + Table 6: end-to-end iteration model")
-    from benchmarks import end_to_end
-    end_to_end.run()
-
-    print("=" * 70)
-    print("## DP balance: LPT vs round-robin chunk-group assignment")
-    from benchmarks import dp_balance
-    emit_json("dp_balance", dp_balance.run(), args.json_dir)
-
-    print("=" * 70)
-    print("## Attention backends: fwd+bwd walltime, compile counts, "
-          "dense-vs-flash crossover")
-    from benchmarks import attention
-    emit_json("attention", attention.run(), args.json_dir)
-
-    print("=" * 70)
-    print("## Serving engine: Poisson long-tail throughput + tail latency, "
-          "mixed-tick vs prefill-stall")
-    from benchmarks import serving
-    emit_json("serving", serving.run(), args.json_dir)
-
-    print("=" * 70)
-    print("## Microbenchmarks")
+def _run_micro(json_dir):
     print("name,us_per_call,derived")
     micro = micro_rows()
     for name, us, derived in micro:
         print(f"{name},{us:.0f},{derived}")
-    emit_json("micro",
-              [{"name": n, "us_per_call": us, "derived": d}
-               for n, us, d in micro], args.json_dir)
+    return [{"name": n, "us_per_call": us, "derived": d}
+            for n, us, d in micro]
 
-    print("=" * 70)
-    print("## Roofline (from dryrun_results.jsonl if present)")
-    from benchmarks import roofline
-    roofline.run()
+
+def _run_pipeline_subprocess(json_dir):
+    """The rotation executor needs >1 device; XLA_FLAGS must be set before
+    jax initializes, so this section always runs as a subprocess (anchored
+    to the repo root, extending — not clobbering — PYTHONPATH)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    pypath = os.pathsep.join(
+        p for p in (os.path.join(root, "src"),
+                    os.environ.get("PYTHONPATH")) if p)
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.pipeline",
+         "--json-dir", os.path.abspath(json_dir)],
+        env=dict(os.environ, PYTHONPATH=pypath), cwd=root)
+    if r.returncode:
+        raise RuntimeError(f"benchmarks.pipeline failed ({r.returncode})")
+    return None          # the subprocess emits BENCH_pipeline.json itself
+
+
+# name, title, module (imported at run AND --list time), entry (a module
+# attribute NAME — resolved at --list time so a rename fails the smoke step
+# — or a local callable(json_dir)), entry kwargs, emits_json
+SECTIONS = [
+    ("length_distribution", "Tables 1-2: length distributions",
+     "benchmarks.length_distribution", "run", {"n": 20_000}, False),
+    ("bubble_ratio", "Figs 2/6/7: pipeline bubble ratios (analytic sim)",
+     "benchmarks.bubble_ratio", "run", {}, False),
+    ("memory_model", "Fig 1 + Table 5: memory model",
+     "benchmarks.memory_model", "run", {}, False),
+    ("end_to_end", "Fig 8 + Table 6: end-to-end iteration model",
+     "benchmarks.end_to_end", "run", {}, False),
+    ("dp_balance", "DP balance: LPT vs round-robin chunk-group assignment",
+     "benchmarks.dp_balance", "run", {}, True),
+    ("attention", "Attention backends: fwd+bwd walltime, compile counts, "
+     "dense-vs-flash crossover",
+     "benchmarks.attention", "run", {}, True),
+    ("serving", "Serving engine: Poisson long-tail throughput + tail "
+     "latency, mixed-tick vs prefill-stall",
+     "benchmarks.serving", "run", {}, True),
+    ("pipeline", "2D pipeline executor: bubble ratio + state bytes vs K "
+     "(subprocess, 4 forced devices)",
+     "benchmarks.pipeline", _run_pipeline_subprocess, {}, True),
+    ("micro", "Microbenchmarks", "benchmarks.run", _run_micro, {}, True),
+    ("roofline", "Roofline (from dryrun_results.jsonl if present)",
+     "benchmarks.roofline", "run", {}, False),
+]
+
+
+def _resolve_entry(name, module, entry):
+    """-> callable. Imports the module either way; attribute-name entries
+    must resolve to a callable or we raise (this is what --list checks)."""
+    mod = importlib.import_module(module)
+    if callable(entry):
+        return entry
+    fn = getattr(mod, entry, None)
+    if not callable(fn):
+        raise SystemExit(
+            f"section {name!r}: {module}.{entry} is not a callable "
+            "(renamed or removed? fix the SECTIONS registry)")
+    return fn
+
+
+def list_sections() -> None:
+    """Import + resolve every section; print the registry. A typo in a
+    module path or a renamed run() raises here and fails CI's smoke step."""
+    print("name,emits_json,title")
+    for name, title, module, entry, kwargs, emits in SECTIONS:
+        _resolve_entry(name, module, entry)
+        print(f"{name},{emits},{title}")
+    print(f"[bench] {len(SECTIONS)} sections registered")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=".",
+                    help="where BENCH_*.json payloads are written")
+    ap.add_argument("--list", action="store_true",
+                    help="import + list registered sections, run nothing")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="run only these sections")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        list_sections()
+        return
+
+    unknown = set(args.only or []) - {s[0] for s in SECTIONS}
+    if unknown:
+        raise SystemExit(f"unknown section(s) in --only: {sorted(unknown)}; "
+                         "see --list")
+
+    for name, title, module, entry, kwargs, emits in SECTIONS:
+        if args.only and name not in args.only:
+            continue
+        print("=" * 70)
+        print(f"## {title}")
+        fn = _resolve_entry(name, module, entry)
+        payload = fn(args.json_dir) if callable(entry) else fn(**kwargs)
+        if emits and payload is not None:
+            emit_json(name, payload, args.json_dir)
 
 
 if __name__ == "__main__":

@@ -206,11 +206,20 @@ def run_batch(cfg: ModelConfig, params, groups, standalone, *, k: int = 1,
     groups: list[list[chunk_batch]]; standalone: list[chunk_batch]
     Returns (mean_loss, grads, stats).
 
-    mesh: optional jax mesh with a "data" axis. With >1 DP devices the batch
-    is executed by the DP orchestrator (`_run_batch_dp`): the dp_balance
-    planner assigns units to ranks and the work runs as batch-dim-sharded
-    waves. With a 1-device mesh (or mesh=None) this is the plain
-    single-device path — bit-for-bit the pre-DP behavior."""
+    mesh: optional jax mesh. With a "pipe" axis of size > 1 the batch runs
+    on the 2D (data x pipe) K-retention rotation pipeline
+    (`distributed.pipeline.run_batch_pipelined` — Algorithm 2 at pipeline
+    scale, K bounding live residual chunk-states per stage). Otherwise, with
+    >1 DP devices the batch is executed by the DP orchestrator
+    (`_run_batch_dp`): the dp_balance planner assigns units to ranks and the
+    work runs as batch-dim-sharded waves. With a 1-device mesh (or
+    mesh=None) this is the plain single-device path — bit-for-bit the
+    pre-DP behavior."""
+    if mesh is not None and sharding.pipe_size(mesh) > 1:
+        from repro.distributed import pipeline
+        return pipeline.run_batch_pipelined(
+            cfg, params, groups, standalone, mesh, k=k,
+            blockwise_threshold=blockwise_threshold, plan_policy=plan_policy)
     if mesh is not None and sharding.dp_size(mesh) > 1:
         return _run_batch_dp(cfg, params, groups, standalone, mesh, k=k,
                              blockwise_threshold=blockwise_threshold,
@@ -248,6 +257,24 @@ def stack_chunk_rows(rows):
             for kk in keys}
 
 
+def stack_wave_slots(cfg: ModelConfig, wave, mesh):
+    """One dp_balance wave -> its chunk-slot stream: a list of (R, C)
+    stacked batches, one per slot, batch-dim sharded over the DP axes.
+    Ranks whose unit is shorter than the wave's longest pad with dummy
+    all-masked chunks (zero loss, zero grads, pure idle — the bubble the
+    planner minimizes). Shared by the DP and pipeline executors so their
+    padding/stacking semantics can never drift apart."""
+    live = [u for u in wave if u is not None]
+    n_max = max(u.n_chunks for u in live)
+    template = live[0].payload[0]
+    slots = []
+    for i in range(n_max):
+        rows = [u.payload[i] if (u is not None and i < u.n_chunks)
+                else dummy_chunk_row(template) for u in wave]
+        slots.append(sharding.dp_put(cfg, stack_chunk_rows(rows), mesh))
+    return slots
+
+
 def _run_batch_dp(cfg: ModelConfig, params, groups, standalone, mesh, *,
                   k: int = 1, blockwise_threshold: int = 8192,
                   plan_policy: str = "lpt"):
@@ -280,14 +307,7 @@ def _run_batch_dp(cfg: ModelConfig, params, groups, standalone, mesh, *,
     grads, total_loss = None, 0.0
     stats = SchedulerStats()
     for wave in waves:
-        live = [u for u in wave if u is not None]
-        n_max = max(u.n_chunks for u in live)
-        template = live[0].payload[0]
-        slots = []
-        for i in range(n_max):
-            rows = [u.payload[i] if (u is not None and i < u.n_chunks)
-                    else dummy_chunk_row(template) for u in wave]
-            slots.append(sharding.dp_put(cfg, stack_chunk_rows(rows), mesh))
+        slots = stack_wave_slots(cfg, wave, mesh)
         l, grads, stats = run_group(cfg, params_r, slots, k=k,
                                     loss_scale=scale, grads=grads,
                                     stats=stats,

@@ -151,6 +151,100 @@ def simulate_1f1b(mbs, n_stages: int, *, state_aware: bool = False):
     )
 
 
+# ----------------------------------------------- SPMD rotation schedule -----
+# The executable pipeline (distributed/pipeline.py) is NOT imperative 1F1B:
+# it is an SPMD *rotation* — a window of W uniform chunk microbatches flows
+# through S stages in W + S - 1 lockstep ticks (every stage computes every
+# tick; fill/drain ticks are masked compute, i.e. bubble). Algorithm 2 is
+# applied at window granularity: the stream of a wave's N chunks is split
+# into ceil(N/K) windows sized [N-(m-1)K, K, ..., K]; only the LAST window's
+# forward keeps differentiation residuals (<= K chunk-states live), every
+# earlier window is re-forwarded (F2) immediately before its backward.
+#
+# 1F1B-vs-rotation delta: `simulate_1f1b` models Megatron's per-rank
+# asynchronous schedule with *variable* microbatch durations (time
+# proportional to tokens_used) and head-of-line-blocking dispatch. The
+# rotation executes capacity-padded C-token chunks in lockstep, so every
+# tick costs one uniform unit (1 for F/F2 scans, 2 for B scans — backward =
+# 2x forward, same convention as `Microbatch.bwd`) and the whole schedule is
+# closed-form integer math. These helpers are that closed form; the executor
+# reports the identical accounting from its real run and
+# tests/test_pipeline2d.py pins executor == simulator exactly.
+
+def rotation_windows(n_chunks: int, k: int) -> list:
+    """Window sizes (front to back) of Algorithm 2 at pipeline scale: the
+    last window holds exactly min(K, N) chunks (residuals kept), earlier
+    windows hold K chunks each except the first, which takes the remainder —
+    so recompute count is exactly N - min(K, N), matching `alg2_schedule`."""
+    n, k = n_chunks, max(1, k)
+    if n <= 0:
+        return []
+    if n <= k:
+        return [n]
+    m = -(-n // k)                       # ceil(n / k) windows
+    return [n - (m - 1) * k] + [k] * (m - 1)
+
+
+@dataclasses.dataclass
+class RotationResult:
+    n_stages: int
+    makespan: float                # lockstep ticks, weighted (B ticks cost 2)
+    useful_time: float             # F + B work summed across stages
+    recompute_time: float          # F2 work summed across stages (bubble)
+    bubble_ratio: float            # idle / (stages * makespan); F2 is bubble
+    recompute_count: int           # chunk recomputes (== sum of N_w - K)
+    peak_resident_chunks: int      # max live residual chunk-states (<= K)
+    kv_capacity_slots: list        # per-wave StateStore capacity, in chunks
+    scans: list = dataclasses.field(default_factory=list)  # (kind, W, ticks)
+
+
+def simulate_rotation(wave_sizes, n_stages: int, k: int, *,
+                      unit: float = 1.0) -> RotationResult:
+    """Closed-form schedule model of the SPMD rotation executor.
+
+    wave_sizes: chunk count of each lockstep wave (the dp_balance wave plan
+    pads every rank to the wave's max, so one integer per wave suffices).
+    Per window of size W: one forward scan (W+S-1 ticks x cost 1), one
+    backward scan (W+S-1 ticks x cost 2), plus one recompute scan (cost 1)
+    for every window except the last. Useful work is F + B only (3 units per
+    chunk per stage); recompute is counted as bubble, like `simulate_1f1b`.
+    """
+    from repro.core.dp_balance import prefix_capacity
+    S = n_stages
+    makespan = 0.0
+    useful = 0.0
+    recompute_time = 0.0
+    recompute_count = 0
+    peak_resident = 0
+    caps = []
+    scans = []
+    for n in wave_sizes:
+        wins = rotation_windows(n, k)
+        caps.append(prefix_capacity(n, 1))     # capacity in chunk slots
+        for i, w in enumerate(wins):
+            last = i == len(wins) - 1
+            ticks = w + S - 1
+            makespan += ticks * unit                        # forward scan
+            scans.append(("F", w, ticks))
+            if not last:
+                makespan += ticks * unit                    # recompute scan
+                recompute_time += S * w * unit
+                recompute_count += w
+                scans.append(("F2", w, ticks))
+            makespan += 2 * ticks * unit                    # backward scan
+            scans.append(("B", w, ticks))
+        useful += 3.0 * n * S * unit
+        peak_resident = max(peak_resident, min(max(1, k), n))
+    bubble = S * makespan - useful
+    return RotationResult(
+        n_stages=S, makespan=makespan, useful_time=useful,
+        recompute_time=recompute_time,
+        bubble_ratio=bubble / (S * makespan) if makespan else 0.0,
+        recompute_count=recompute_count,
+        peak_resident_chunks=peak_resident,
+        kv_capacity_slots=caps, scans=scans)
+
+
 # --------------------------------------------------- ChunkFlow front-end ----
 def chunks_to_microbatches(chunks, unit: float = 1.0, k: int = 1):
     """Map core.chunking.Chunk objects to simulator microbatches; mark the

@@ -1,31 +1,60 @@
-"""SPMD pipeline-parallel executor for chunk streams (paper §4.3, adapted).
+"""SPMD pipeline-parallel executors for chunk streams (paper §4.3, adapted).
 
 TPU/JAX adaptation (DESIGN.md §2): Megatron's 1F1B is an imperative per-rank
 schedule; in JAX the idiomatic equivalent is an SPMD rotation pipeline —
 ``shard_map`` over a ``pipe`` mesh axis, stage weights sharded on their
-leading dim, activations handed to the next stage with
-``lax.collective_permute`` each tick, ``M + S - 1`` ticks total. Backward is
-obtained by differentiating through the rotation (collective_permute
-transposes to the reverse permutation), which XLA schedules 1F1B-style per
-stage. The *state-aware* part is preserved exactly: each stage keeps a
-resident K/V buffer for the dependent group being streamed, so chunk ``j``
-attends to the K/V of chunks ``< j`` computed on that same stage — the
-paper's StateStore, pipelined.
+leading (layer) dim, activations handed to the next stage with
+``lax.ppermute`` each tick, ``W + S - 1`` ticks per scan of W microbatches.
 
-The schedule-level analysis (bubble ratios, recompute placement, K trade-off)
-lives in core/schedule_sim.py; this module is the executable counterpart and
-is validated for numerical equivalence in tests/test_pipeline_exec.py.
+Two executors live here:
+
+  * ``make_pipeline_step`` — the original full-residency reference: one
+    differentiable scan over the whole stream, every chunk's K/V and every
+    chunk's differentiation residuals held live. Simple, and the numerical
+    oracle for the real path below (tests/test_pipeline_exec.py).
+
+  * ``run_batch_pipelined`` — the trainable 2D (``data`` x ``pipe``) path:
+    Algorithm 2 at pipeline scale. The dp_balance planner assigns chunk
+    groups to DP ranks and the work runs as lockstep waves exactly like
+    ``chunked_step._run_batch_dp``; within a wave the chunk stream is split
+    into windows of at most K chunks and each window is one rotation scan.
+    Only the LAST window's forward runs under ``jax.vjp`` — at most K chunk
+    microbatches' residuals are ever live — and every earlier window is
+    re-forwarded (F2) immediately before its backward, so the executor's
+    schedule is exactly ``schedule_sim.simulate_rotation``'s closed form
+    (tests/test_pipeline2d.py pins the accounting to be identical).
+
+State layout: per stage, the chunks' K/V lives in ONE capacity-padded
+StateStore buffer (PR 2 layout — ``prefix_capacity`` bucketing, chunk i's
+own K/V written at slot offset ``i*C``, unused slots keep seg=0 and are
+exactly masked). The buffer is threaded through the window scans as a
+shard_map carry, sharded layer-dim over ``pipe`` and batch-dim over
+``data``. The K knob does NOT shrink this buffer — chunk i's recompute reads
+the K/V of every chunk j < i, so the group's K/V must stay resident (same as
+the single-device executor, where ``prefixes`` holds all K/V and only the
+vjp residuals are bounded by K). What K bounds is the dominant memory term:
+live differentiation residuals (per-layer activations), measured per window
+via the vjp pytree. Gradients flow back through the K/V buffer chain —
+window w's vjp consumes the accumulated K/V cotangent and returns the
+cotangent w.r.t. its input buffer, which routes each slot's gradient to the
+producing window automatically (the pipelined ``split_prefix_cot``).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import dp_balance
+from repro.core import statestore as ss
+from repro.distributed import sharding
 from repro.distributed.compat import pcast_varying, shard_map
+from repro.models import api
 from repro.models import layers as L
 
 
@@ -38,34 +67,35 @@ def split_stages(layer_params, n_stages: int):
     return jax.tree.map(r, layer_params)
 
 
-def _stage_apply(cfg: ModelConfig, stage_layers, x, pos, seg,
-                 kbuf, vbuf, prefix_valid):
+def _stage_apply(cfg: ModelConfig, stage_layers, windows, x, pos, seg,
+                 kbuf, vbuf, p_pos, p_seg, blockwise_threshold: int):
     """Run this stage's layer slab over one chunk.
 
-    kbuf/vbuf: (Lp, B, maxP, Hkv, hd) resident K/V of earlier chunks;
-    prefix_valid: (maxP,) bool — which prefix slots are live for this chunk.
+    kbuf/vbuf: (Lp, B, cap, Hkv, hd) resident K/V of earlier chunks;
+    p_pos/p_seg: (B, cap) int32 prefix metadata (seg=0 slots are masked).
+    windows: (Lp,) per-layer sliding windows (api._layer_windows slab).
+    Mirrors api._decoder_forward's layer body exactly so the pipeline is
+    numerically identical to the single-device chunk fn.
     Returns (y, new_k (Lp,B,T,Hkv,hd), new_v).
     """
-    B, T, _ = x.shape
-    maxP = kbuf.shape[2]
-    p_pos = jnp.broadcast_to(jnp.arange(maxP, dtype=jnp.int32), (B, maxP))
-    p_seg = jnp.broadcast_to(prefix_valid.astype(jnp.int32), (B, maxP))
-
     def layer_fn(x, xs):
-        lp, pk, pv = xs
+        lp, window, pk, pv = xs
         prefix = {"k": pk, "v": pv, "pos": p_pos, "seg": p_seg}
         h, new_kv = L.attention_layer(
             lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
-            positions=pos, segment_ids=seg, prefix=prefix,
-            blockwise_threshold=1 << 30)
+            positions=pos, segment_ids=seg, prefix=prefix, window=window,
+            blockwise_threshold=blockwise_threshold)
         x = x + h
         h2 = L.swiglu_mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps))
         return x + h2, new_kv
 
-    y, new_kv = jax.lax.scan(layer_fn, x, (stage_layers, kbuf, vbuf))
+    y, new_kv = jax.lax.scan(layer_fn, x, (stage_layers, windows, kbuf, vbuf))
     return y, new_kv["k"], new_kv["v"]
 
 
+# =========================================================================
+# Full-residency reference executor (kept as the numerical oracle)
+# =========================================================================
 def pipelined_chunk_forward(cfg: ModelConfig, stage_layers, x_mbs, pos_mbs,
                             seg_mbs, dep_flags, chunk_size: int,
                             axis: str = "pipe"):
@@ -82,6 +112,7 @@ def pipelined_chunk_forward(cfg: ModelConfig, stage_layers, x_mbs, pos_mbs,
     maxP = chunk_size * M
     Lp = jax.tree.leaves(stage_layers)[0].shape[0]
     hd = cfg.resolved_head_dim
+    windows = jnp.full((Lp,), 1 << 30, jnp.int32)
 
     def varying(x):
         return pcast_varying(x, (axis,))
@@ -103,9 +134,11 @@ def pipelined_chunk_forward(cfg: ModelConfig, stage_layers, x_mbs, pos_mbs,
         is_dep = dep_flags[j] > 0
         plen = jnp.where(is_dep, dep_prefix_chunks[j] * chunk_size, 0)
         prefix_valid = jnp.arange(maxP) < plen
+        p_pos = jnp.broadcast_to(jnp.arange(maxP, dtype=jnp.int32), (B, maxP))
+        p_seg = jnp.broadcast_to(prefix_valid.astype(jnp.int32), (B, maxP))
 
-        y, nk, nv = _stage_apply(cfg, stage_layers, x_in, pos, seg,
-                                 kbuf, vbuf, prefix_valid)
+        y, nk, nv = _stage_apply(cfg, stage_layers, windows, x_in, pos, seg,
+                                 kbuf, vbuf, p_pos, p_seg, 1 << 30)
 
         # store this chunk's K/V into the resident group buffer
         write = (valid & is_dep).astype(kbuf.dtype)
@@ -139,7 +172,7 @@ def pipelined_chunk_forward(cfg: ModelConfig, stage_layers, x_mbs, pos_mbs,
 
 def make_pipeline_step(cfg: ModelConfig, mesh, n_stages: int,
                        chunk_size: int, axis: str = "pipe"):
-    """Build a jitted pipeline-parallel loss/grad step.
+    """Build a jitted pipeline-parallel loss/grad step (full residency).
 
     params: api.init_params output for a dense cfg with layers divisible by
     n_stages. Batch: dict of (M, B, T) arrays + dep_flags (M,).
@@ -170,3 +203,297 @@ def make_pipeline_step(cfg: ModelConfig, mesh, n_stages: int,
         return loss * batch["loss_scale"]
 
     return jax.jit(jax.value_and_grad(loss_fn))
+
+
+# =========================================================================
+# 2D (data x pipe) K-retention executor — Algorithm 2 at pipeline scale
+# =========================================================================
+
+# Trace-time log of the jitted window fn — one entry per Python retrace
+# (== per fresh XLA compile), recording (cfg, window, capacity, rows, C).
+# The pipeline benchmark's compile-count regression metric reads this.
+PIPE_TRACE_EVENTS: list = []
+
+
+def reset_pipe_trace_log():
+    PIPE_TRACE_EVENTS.clear()
+    _window_step_fn.cache_clear()
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    """Mirrors SchedulerStats fields (train.py reads them) + the rotation
+    schedule accounting that tests pin against simulate_rotation."""
+    forward_calls: int = 0
+    recompute_calls: int = 0
+    backward_calls: int = 0
+    max_live_residuals: int = 0        # live residual chunk-states (<= K)
+    # tick accounting, in simulate_rotation units (F tick = 1, B tick = 2)
+    makespan_units: float = 0.0
+    useful_units: float = 0.0          # F + B work summed across stages
+    recompute_units: float = 0.0       # F2 work summed across stages
+    n_stages: int = 0
+    # state accounting
+    wave_sizes: list = dataclasses.field(default_factory=list)
+    kv_capacity_slots: list = dataclasses.field(default_factory=list)
+    kv_store_bytes: int = 0            # peak StateStore K/V bytes (all stages)
+    peak_residual_bytes: int = 0       # measured from the live vjp pytree
+    scans: list = dataclasses.field(default_factory=list)
+
+    @property
+    def bubble_ratio(self) -> float:
+        total = self.n_stages * self.makespan_units
+        return (total - self.useful_units) / total if total else 0.0
+
+
+def _windows_slab(cfg: ModelConfig, n_stages: int):
+    return np.asarray(api._layer_windows(cfg)).reshape(
+        n_stages, cfg.num_layers // n_stages)
+
+
+@functools.lru_cache(maxsize=None)
+def _window_step_fn(cfg: ModelConfig, mesh, n_stages: int,
+                    blockwise_threshold: int, axis: str):
+    """Jitted loss/state fn for ONE rotation window: (params, kv, batch) ->
+    (loss, kv_out). Compiles once per (window, capacity, rows) shape."""
+    win_np = _windows_slab(cfg, n_stages)
+
+    def body(stage_layers, windows, kv, x_mbs, pos_mbs, seg_mbs,
+             ppos_mbs, pseg_mbs, offsets, write_flags):
+        s = jax.lax.axis_index(axis)
+        S = n_stages
+        stage_layers = jax.tree.map(lambda a: a[0], stage_layers)
+        windows = windows[0]
+        kbuf, vbuf = kv["k"], kv["v"]          # (Lp, r, cap, Hkv, hd)
+        W, r, C, D = x_mbs.shape
+        Lp, _, cap, Hkv, hd = kbuf.shape
+
+        def varying(x):
+            return pcast_varying(x, (axis,))
+
+        state0 = varying(jnp.zeros((r, C, D), x_mbs.dtype))
+        outs0 = varying(jnp.zeros_like(x_mbs))
+        kbuf = varying(kbuf)
+        vbuf = varying(vbuf)
+
+        def tick(carry, t):
+            state, kbuf, vbuf, outs = carry
+            j = jnp.clip(t - s, 0, W - 1)
+            valid = (t - s >= 0) & (t - s < W)
+
+            x_in = jnp.where(s == 0, x_mbs[j], state)
+            y, nk, nv = _stage_apply(
+                cfg, stage_layers, windows, x_in, pos_mbs[j], seg_mbs[j],
+                kbuf, vbuf, ppos_mbs[j], pseg_mbs[j], blockwise_threshold)
+
+            if cap >= C:       # store this chunk's K/V at its slot offset
+                write = (valid & (write_flags[j] > 0)).astype(kbuf.dtype)
+                off = offsets[j]
+                upd = jax.lax.dynamic_slice(
+                    kbuf, (0, 0, off, 0, 0), (Lp, r, C, Hkv, hd))
+                kbuf = jax.lax.dynamic_update_slice(
+                    kbuf, upd * (1 - write) + nk * write, (0, 0, off, 0, 0))
+                upd = jax.lax.dynamic_slice(
+                    vbuf, (0, 0, off, 0, 0), (Lp, r, C, Hkv, hd))
+                vbuf = jax.lax.dynamic_update_slice(
+                    vbuf, upd * (1 - write) + nv * write, (0, 0, off, 0, 0))
+
+            rec = (valid & (s == S - 1)).astype(outs.dtype)
+            cur = jax.lax.dynamic_slice(outs, (j, 0, 0, 0), (1, r, C, D))
+            outs = jax.lax.dynamic_update_slice(
+                outs, cur * (1 - rec) + y[None] * rec, (j, 0, 0, 0))
+
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            state = jax.lax.ppermute(y, axis, perm)
+            return (state, kbuf, vbuf, outs), None
+
+        (_, kbuf, vbuf, outs), _ = jax.lax.scan(
+            tick, (state0, kbuf, vbuf, outs0), jnp.arange(W + S - 1))
+        outs = jax.lax.psum(outs * (s == S - 1), axis)
+        return outs, {"k": kbuf, "v": vbuf}
+
+    def f(params, kv, batch):
+        W, R, C = batch["tokens"].shape
+        cap = kv["k"].shape[2]
+        PIPE_TRACE_EVENTS.append((cfg.name, W, cap, R, C))
+        from repro.core.chunked_step import token_nll_sum
+        stage_layers = split_stages(params["layers"], n_stages)
+        windows = jnp.asarray(win_np)
+        x_mbs = params["embed"][batch["tokens"]]
+        outs, kv_out = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis, "data"), P(None, "data"),
+                      P(None, "data"), P(None, "data"), P(None, "data"),
+                      P(None, "data"), P(), P()),
+            out_specs=(P(None, "data"), P(axis, "data")),
+            check_vma=False,
+        )(stage_layers, windows, kv, x_mbs, batch["positions"],
+          batch["segment_ids"], batch["prefix_pos"], batch["prefix_seg"],
+          batch["offsets"], batch["write_flags"])
+        x = L.rms_norm(outs, params["ln_f"], cfg.norm_eps)
+        logits = api._unembed(cfg, params, x)
+        loss = token_nll_sum(
+            logits.reshape(W * R, C, logits.shape[-1]),
+            batch["labels"].reshape(W * R, C),
+            batch["loss_mask"].reshape(W * R, C))
+        return loss * batch["loss_scale"], kv_out
+
+    return jax.jit(f)
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.nbytes for x in jax.tree.leaves(tree)
+               if hasattr(x, "nbytes"))
+
+
+def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
+                        mesh, n_stages: int, loss_scale: float, grads,
+                        stats: PipelineStats, blockwise_threshold: int,
+                        axis: str = "pipe"):
+    """Algorithm 2 over one lockstep wave of chunk slots, pipelined.
+
+    slots: list of (R, C) stacked chunk batches (one row per DP rank, dummy
+    rows fully masked). Windows of at most K slots run as rotation scans;
+    only the last window's forward keeps residuals, earlier windows are
+    re-forwarded right before their backward (F2). Returns (loss, grads).
+    """
+    from repro.core import chunked_step as cs
+    from repro.core.schedule_sim import rotation_windows
+
+    n = len(slots)
+    R, C = slots[0]["tokens"].shape
+    S = n_stages
+    cap = ss.prefix_capacity(n, C)
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+
+    # prefix metadata per slot: pos/seg of slots < i (seg=0 => masked)
+    meta = cs._prefix_meta_init(R, cap)
+    metas = [meta]
+    for i, b in enumerate(slots[:-1]):
+        meta = cs._prefix_meta_write(meta, b, cfg, i * C)
+        metas.append(meta)
+
+    kv_sharding = NamedSharding(mesh, P(axis, "data"))
+    kv = jax.device_put(
+        {"k": jnp.zeros((cfg.num_layers, R, cap, cfg.padded_num_kv_heads,
+                         hd), dtype),
+         "v": jnp.zeros((cfg.num_layers, R, cap, cfg.padded_num_kv_heads,
+                         hd), dtype)},
+        kv_sharding)
+    stats.kv_store_bytes = max(stats.kv_store_bytes, _tree_bytes(kv))
+    stats.wave_sizes.append(n)
+    stats.kv_capacity_slots.append(cap // C if C else 0)
+
+    f = _window_step_fn(cfg, mesh, S, blockwise_threshold, axis)
+    scale = jnp.asarray(loss_scale, jnp.float32)
+
+    def window_batch(g0, g1):
+        b = {kk: jnp.stack([slots[g][kk] for g in range(g0, g1)])
+             for kk in slots[0]}
+        b["prefix_pos"] = jnp.stack([metas[g][0] for g in range(g0, g1)])
+        b["prefix_seg"] = jnp.stack([metas[g][1] for g in range(g0, g1)])
+        b["offsets"] = jnp.asarray([g * C for g in range(g0, g1)], jnp.int32)
+        b["write_flags"] = jnp.asarray(
+            [1 if g < n - 1 else 0 for g in range(g0, g1)], jnp.int32)
+        b["loss_scale"] = scale
+        return b
+
+    wins = rotation_windows(n, k)
+    ranges, g0 = [], 0
+    for w in wins:
+        ranges.append((g0, g0 + w))
+        g0 += w
+
+    total_loss = 0.0
+    kept_vjp = None
+    for wi, (g0, g1) in enumerate(ranges):
+        W = g1 - g0
+        batch_w = window_batch(g0, g1)
+        if wi == len(ranges) - 1:        # keep residuals for the last window
+            (loss_w, kv), kept_vjp = jax.vjp(
+                lambda p, kv_in, b=batch_w: f(p, kv_in, b), params, kv)
+            stats.max_live_residuals = max(stats.max_live_residuals, W)
+            stats.peak_residual_bytes = max(stats.peak_residual_bytes,
+                                            _tree_bytes(kept_vjp))
+        else:
+            loss_w, kv = f(params, kv, batch_w)
+        total_loss = total_loss + loss_w
+        stats.forward_calls += W
+        stats.makespan_units += (W + S - 1)
+        stats.useful_units += 3.0 * W * S
+        stats.scans.append(("F", W, W + S - 1))
+
+    kv_full = kv
+    one = jnp.ones((), jnp.float32)
+    g_kv = jax.tree.map(jnp.zeros_like, kv_full)
+    vjp_fn = None
+    for wi in reversed(range(len(ranges))):
+        g0, g1 = ranges[wi]
+        W = g1 - g0
+        if wi == len(ranges) - 1:
+            vjp_fn, kept_vjp = kept_vjp, None
+        else:                            # F2: recompute right before backward
+            # drop the consumed window's closure BEFORE building the next
+            # one, so at most K chunks' residuals are ever live
+            vjp_fn = None
+            batch_w = window_batch(g0, g1)
+            (_, _), vjp_fn = jax.vjp(
+                lambda p, kv_in, b=batch_w: f(p, kv_in, b), params, kv_full)
+            stats.recompute_calls += W
+            stats.max_live_residuals = max(stats.max_live_residuals, W)
+            stats.peak_residual_bytes = max(stats.peak_residual_bytes,
+                                            _tree_bytes(vjp_fn))
+            stats.makespan_units += (W + S - 1)
+            stats.recompute_units += 1.0 * W * S
+            stats.scans.append(("F2", W, W + S - 1))
+        gp, g_kv = vjp_fn((one, g_kv))
+        grads = ss.tree_add(grads, gp)
+        stats.backward_calls += W
+        stats.makespan_units += 2 * (W + S - 1)
+        stats.scans.append(("B", W, W + S - 1))
+    return total_loss, grads
+
+
+def run_batch_pipelined(cfg: ModelConfig, params, groups, standalone,
+                        mesh, *, k: int = 1, blockwise_threshold: int = 8192,
+                        plan_policy: str = "lpt", axis: str = "pipe"):
+    """One training micro-iteration on a 2D (data x pipe) mesh.
+
+    The dp_balance planner assigns dependent groups / packed standalone
+    chunks to DP ranks (token-work LPT, largest-first stream order so big
+    units align across ranks and across waves — that alignment is what keeps
+    the lockstep rotation's dummy-padding, and therefore its bubble,
+    minimal). Each wave's slots are stacked (R, C) batches sharded over
+    ``data``; the rotation pipelines them over ``pipe`` with the K-retention
+    schedule. Numerically equivalent to the single-device ``run_batch``
+    (tests/test_pipeline2d.py: <=1e-5, including K < N recompute).
+    """
+    if cfg.family != "dense":
+        raise NotImplementedError(
+            "pipeline executor supports stacked dense decoders; "
+            f"family={cfg.family!r} (split_stages needs a uniform layer slab)")
+    S = sharding.pipe_size(mesh)
+    if cfg.num_layers % S:
+        raise ValueError(f"num_layers={cfg.num_layers} not divisible by "
+                         f"pipe={S}")
+    from repro.core import chunked_step as cs
+
+    R = sharding.dp_size(mesh)
+    scale = cs._batch_loss_scale(groups, standalone)
+    units = dp_balance.units_from_materialized(groups, standalone, k=k,
+                                               static_shapes=True)
+    plan = dp_balance.plan_assignment(units, R, policy=plan_policy)
+    waves, _ = dp_balance.wave_schedule(plan)
+
+    params = sharding.pipeline_put(mesh, params)
+    grads, total_loss = None, 0.0
+    stats = PipelineStats(n_stages=S)
+    for wave in waves:
+        slots = cs.stack_wave_slots(cfg, wave, mesh)
+        l, grads = _run_wave_pipelined(
+            cfg, params, slots, k=k, mesh=mesh, n_stages=S,
+            loss_scale=scale, grads=grads, stats=stats,
+            blockwise_threshold=blockwise_threshold, axis=axis)
+        total_loss = total_loss + l
+    return total_loss, grads, stats

@@ -162,6 +162,47 @@ def dp_size(mesh) -> int:
     return pod * data
 
 
+def pipe_size(mesh) -> int:
+    """Size of the pipeline-stage axis (1 when the mesh has none)."""
+    if mesh is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("pipe", 1)
+
+
+def pipeline_param_specs(tree, mesh):
+    """Stage-sharded placement for the 2D (data x pipe) training mesh.
+
+    Every leaf under a ``layers`` subtree is layer-stacked (leading dim L);
+    sharding that dim over ``pipe`` puts contiguous L/S layer slabs on each
+    stage — exactly the `split_stages` blocks the rotation executor consumes,
+    with no gather. Everything else (embed / unembed / ln_f, optimizer
+    scalars) replicates. Works for params and for param-shaped optimizer
+    slots (the ``layers`` path component appears at any depth)."""
+    psz = pipe_size(mesh)
+
+    def leaf(path, x):
+        names = [getattr(kk, "key", getattr(kk, "name", None)) for kk in path]
+        if ("layers" in names and getattr(x, "ndim", 0) >= 1
+                and x.shape[0] % psz == 0):
+            return P("pipe", *([None] * (x.ndim - 1)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def pipeline_put(mesh, tree):
+    """Place params (or param-shaped opt state) per `pipeline_param_specs`.
+    No-op when the first layers leaf is already resident with that sharding."""
+    specs = pipeline_param_specs(tree, mesh)
+    flat = jax.tree.leaves(tree)
+    flat_s = [NamedSharding(mesh, sp) for sp in jax.tree.leaves(specs)]
+    if flat and all(getattr(x, "sharding", None) == s
+                    for x, s in zip(flat, flat_s)):
+        return tree
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)), tree, specs)
+
+
 def replicate_put(mesh, tree):
     """Place a pytree on the mesh fully replicated (params, opt state).
     No-op when the tree is already resident-replicated there."""

@@ -25,3 +25,14 @@ def make_pipeline_mesh(n_stages: int = 4, data: int = 1):
     if data > 1:
         return jax.make_mesh((n_stages, data), ("pipe", "data"))
     return jax.make_mesh((n_stages,), ("pipe",))
+
+
+def make_train_mesh(data: int = 1, pipe: int = 1):
+    """2D (data x pipe) mesh for the K-retention pipeline trainer
+    (distributed/pipeline.run_batch_pipelined, train.py --dp/--pp). Needs
+    data*pipe visible devices; on CPU force them with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N. With pipe == 1 this
+    degrades to the pure-DP mesh (axis still named "data")."""
+    if pipe <= 1:
+        return make_data_mesh(data)
+    return jax.make_mesh((data, pipe), ("data", "pipe"))

@@ -4,10 +4,12 @@ Each iteration: sample a long-tail batch -> Algorithm 1 chunk construction
 (on a background prefetch thread, overlapped with device compute) ->
 Algorithm 2 state-aware scheduling (gradients accumulate across chunks &
 groups; with --dp N the dp_balance planner spreads chunk groups across a
-data mesh axis and GSPMD psums the gradients) -> one optimizer step with
-donated param/grad/opt buffers. Mathematically equivalent to full-sequence
-training (tests/test_chunked_equivalence.py, tests/test_dp_balance.py), with
-peak activation memory bounded by K * ChunkSize tokens per rank.
+data mesh axis and GSPMD psums the gradients; with --pp S the same plan
+runs on a 2D data x pipe mesh through the K-retention rotation pipeline) ->
+one optimizer step with donated param/grad/opt buffers. Mathematically
+equivalent to full-sequence training (tests/test_chunked_equivalence.py,
+tests/test_dp_balance.py, tests/test_pipeline2d.py), with peak activation
+memory bounded by K * ChunkSize tokens per rank (per stage under --pp).
 
 CPU-scale entry points (the multi-pod path is exercised by launch/dryrun.py):
 
@@ -17,6 +19,10 @@ CPU-scale entry points (the multi-pod path is exercised by launch/dryrun.py):
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
         --steps 5 --chunk-size 256 --k 1 --reduced --dp 4
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+        --steps 5 --chunk-size 256 --retain-k 2 --reduced --dp 2 --pp 2
 """
 from __future__ import annotations
 
@@ -66,7 +72,13 @@ def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
     sampler = sampler or LongTailSampler(PAPER_EVAL_CDF, min_len=32,
                                          seed=tc.seed, max_len=max_len)
     dp = sharding.dp_size(mesh) if mesh is not None else 1
-    if dp > 1:
+    pp = sharding.pipe_size(mesh)
+    if pp > 1:
+        # stage-sharded layer slabs over "pipe", everything else replicated;
+        # adamw m/v are param-shaped so they inherit the same placement
+        params = sharding.pipeline_put(mesh, params)
+        opt_state = sharding.pipeline_put(mesh, opt_state)
+    elif dp > 1:
         # keep train state resident on the mesh (replicated) across steps so
         # run_batch/apply_update never re-transfer it
         params = sharding.replicate_put(mesh, params)
@@ -96,7 +108,8 @@ def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
             # counts without device round-trips, and dp_put transfers each
             # stacked wave slot straight to its sharded layout (no staging
             # copy on the default device)
-            gb, sb = (gb_h, sb_h) if dp > 1 else _to_device(gb_h, sb_h)
+            gb, sb = (gb_h, sb_h) if (dp > 1 or pp > 1) \
+                else _to_device(gb_h, sb_h)
             loss, grads, stats = chunked_step.run_batch(
                 cfg, params, gb, sb, k=tc.k_chunks, mesh=mesh,
                 plan_policy=plan_policy)
@@ -112,13 +125,17 @@ def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
                 "n_groups": len(gb), "recomputes": stats.recompute_calls,
                 "peak_residuals": stats.max_live_residuals,
             })
+            if pp > 1:
+                history[-1]["bubble_ratio"] = stats.bubble_ratio
             if step % log_every == 0:
                 h = history[-1]
                 print(f"step {step:4d} loss {h['loss']:.4f}"
                       f" gnorm {h['gnorm']:.3f}"
                       f" chunks {h['n_chunks']:3d} (groups {h['n_groups']})"
                       f" recompute {h['recomputes']} {dt:.2f}s"
-                      + (f" dp {dp}" if dp > 1 else ""))
+                      + (f" dp {dp}" if dp > 1 else "")
+                      + (f" pp {pp} bubble {stats.bubble_ratio:.0%}"
+                         if pp > 1 else ""))
     finally:
         if hasattr(stream, "close"):
             stream.close()
@@ -137,7 +154,10 @@ def main(argv=None):
                     help="train the smoke-scale variant (CPU-friendly)")
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--chunk-size", type=int, default=256)
-    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--k", "--retain-k", type=int, default=1, dest="k",
+                    help="Algorithm 2 K: chunk states retained for backward "
+                         "(per stage when --pp > 1); first N-K chunks of a "
+                         "group are recomputed")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=1024)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -146,6 +166,10 @@ def main(argv=None):
                     help="data-parallel degree; needs >= dp visible devices "
                          "(CPU: XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages; composes with --dp on a 2D "
+                         "(data x pipe) mesh of dp*pp devices (num_layers "
+                         "must divide by pp)")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="host-side prefetch depth (0 = synchronous)")
     ap.add_argument("--plan", default="lpt",
@@ -158,7 +182,12 @@ def main(argv=None):
         cfg = cfg.reduced()
     tc = TrainConfig(chunk_size=args.chunk_size, k_chunks=args.k,
                      learning_rate=args.lr, total_steps=args.steps)
-    mesh = mesh_lib.make_data_mesh(args.dp) if args.dp > 1 else None
+    if args.pp > 1:
+        mesh = mesh_lib.make_train_mesh(args.dp, args.pp)
+    elif args.dp > 1:
+        mesh = mesh_lib.make_data_mesh(args.dp)
+    else:
+        mesh = None
     train(cfg, tc, batch_per_step=args.batch, max_len=args.max_len,
           checkpoint_path=args.checkpoint, mesh=mesh,
           prefetch_depth=args.prefetch, plan_policy=args.plan)

@@ -1,0 +1,141 @@
+"""2D (data x pipe) K-retention pipeline executor: numerical equivalence to
+the single-device ChunkFlow scheduler, and exact agreement of its schedule
+accounting with core.schedule_sim.simulate_rotation.
+
+Both tests run in subprocesses because XLA_FLAGS must be set before jax
+initializes (and the rest of the suite must keep seeing 1 device), like
+test_pipeline_exec.py / test_dp_balance.py.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+_PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import chunking, chunked_step
+from repro.models import api
+from repro.launch import mesh as mesh_lib
+
+cfg = ModelConfig(name="tiny2d", family="dense", num_layers=4, d_model=32,
+                  num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                  vocab_size=61, dtype="float32", rope_theta=10_000.0)
+C = 16
+
+
+def make_batch(lengths, seed=0):
+    rng = np.random.RandomState(seed)
+    seqs = {i: rng.randint(1, cfg.vocab_size, size=l).astype(np.int32)
+            for i, l in lengths.items()}
+    chunks = chunking.construct_chunks(lengths, C)
+    groups, standalone = chunking.group_chunks(chunks)
+    gb = [[chunking.materialize_chunk(c, seqs) for c in g]
+          for g in groups.values()]
+    sb = [chunking.materialize_chunk(c, seqs) for c in standalone]
+    return gb, sb
+
+
+def single_device_ref(gb, sb, k):
+    gb_d = [[{k2: jnp.asarray(v) for k2, v in b.items()} for b in g]
+            for g in gb]
+    sb_d = [{k2: jnp.asarray(v) for k2, v in b.items()} for b in sb]
+    return chunked_step.run_batch(cfg, params, gb_d, sb_d, k=k)
+"""
+
+EQUIVALENCE = _PRELUDE + r"""
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+mesh = mesh_lib.make_train_mesh(2, 2)          # data=2 x pipe=2
+
+# mixed-length stream: a 5-chunk group (recompute with K=2), a 3-chunk
+# group, and short sequences that pack into standalone chunks
+gb, sb = make_batch({0: 5 * C - 3, 1: 3 * C, 2: 9, 3: 5, 4: 12, 5: 7})
+
+for k in (2, 1):                               # K < N: recompute exercised
+    loss, grads, stats = chunked_step.run_batch(cfg, params, gb, sb, k=k,
+                                                mesh=mesh)
+    ref_loss, ref_grads, _ = single_device_ref(gb, sb, k)
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+        grads, ref_grads)
+    assert stats.recompute_calls > 0           # K < N actually recomputed
+    assert stats.max_live_residuals <= max(1, k)
+
+# dense-only stream (one long group, no standalone), K covering everything
+gb, sb = make_batch({0: 4 * C}, seed=3)
+loss, grads, stats = chunked_step.run_batch(cfg, params, gb, sb, k=4,
+                                            mesh=mesh)
+ref_loss, ref_grads, _ = single_device_ref(gb, sb, 4)
+np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+jax.tree.map(
+    lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+    grads, ref_grads)
+assert stats.recompute_calls == 0
+print("PIPELINE2D-EQUIVALENCE-OK")
+"""
+
+SIM_AGREEMENT = _PRELUDE + r"""
+from repro.core.schedule_sim import simulate_rotation
+from repro.distributed import pipeline
+
+params = api.init_params(cfg, jax.random.PRNGKey(1))
+
+MIXES = {
+    "uniform": {0: 4 * C, 1: 4 * C},
+    "longtail": {0: 6 * C - 5, 1: 2 * C, 2: 9, 3: 30, 4: 12},
+}
+kv_bytes_per_slot = (2 * cfg.num_layers * C * cfg.padded_num_kv_heads
+                     * cfg.resolved_head_dim * 4)     # k+v, fp32
+
+for stages in (2, 4):
+    mesh = mesh_lib.make_train_mesh(1, stages)
+    for mix, lengths in MIXES.items():
+        gb, sb = make_batch(lengths, seed=7)
+        for k in (1, 2, 4):
+            loss, grads, st = chunked_step.run_batch(cfg, params, gb, sb,
+                                                     k=k, mesh=mesh)
+            sim = simulate_rotation(st.wave_sizes, stages, k)
+            tag = (stages, mix, k)
+            assert st.recompute_calls == sim.recompute_count, tag
+            assert st.max_live_residuals == sim.peak_resident_chunks, tag
+            assert st.kv_capacity_slots == sim.kv_capacity_slots, tag
+            assert st.makespan_units == sim.makespan, tag
+            assert st.useful_units == sim.useful_time, tag
+            assert st.recompute_units == sim.recompute_time, tag
+            assert abs(st.bubble_ratio - sim.bubble_ratio) < 1e-12, tag
+            # resident-state bytes: executor's measured StateStore == the
+            # simulator's slot prediction converted with the model geometry
+            want = max(sim.kv_capacity_slots) * kv_bytes_per_slot
+            assert st.kv_store_bytes == want, (tag, st.kv_store_bytes, want)
+print("PIPELINE2D-SIM-AGREEMENT-OK")
+"""
+
+
+def _run(script):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True,
+                          cwd=os.path.dirname(
+                              os.path.dirname(os.path.abspath(__file__))))
+
+
+def test_pipeline2d_matches_single_device():
+    r = _run(EQUIVALENCE)
+    assert "PIPELINE2D-EQUIVALENCE-OK" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+def test_pipeline2d_matches_schedule_sim():
+    r = _run(SIM_AGREEMENT)
+    assert "PIPELINE2D-SIM-AGREEMENT-OK" in r.stdout, \
+        r.stdout + "\n" + r.stderr

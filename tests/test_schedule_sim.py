@@ -20,7 +20,9 @@ import pytest
 
 from repro.core.chunking import construct_chunks
 from repro.core.schedule_sim import (Microbatch, chunks_to_microbatches,
-                                     sequences_to_microbatches, simulate_1f1b)
+                                     rotation_windows,
+                                     sequences_to_microbatches,
+                                     simulate_1f1b, simulate_rotation)
 
 LENGTHS = {0: 4, 1: 2, 2: 1, 3: 1}     # Fig. 2(a), longest-first order
 
@@ -103,3 +105,64 @@ def test_recompute_accounting():
            Microbatch(2.0, group=0, index_in_group=1, group_size=2)]
     r = simulate_1f1b(mbs, 2, state_aware=True)
     assert r.recompute_time == 2.0 * 2                  # once per stage
+
+
+# ------------------------------------------------- SPMD rotation schedule ---
+def test_rotation_windows_partition():
+    for n in range(1, 12):
+        for k in range(1, 12):
+            wins = rotation_windows(n, k)
+            assert sum(wins) == n
+            assert all(w >= 1 for w in wins)
+            assert max(wins) <= max(1, k)
+            # recompute count matches alg2_schedule's keep_from = N - K
+            assert n - wins[-1] == max(n - max(1, k), 0)
+    assert rotation_windows(5, 2) == [1, 2, 2]
+    assert rotation_windows(4, 2) == [2, 2]
+    assert rotation_windows(3, 5) == [3]
+    assert rotation_windows(0, 2) == []
+
+
+def test_rotation_closed_form_single_wave():
+    # one wave of 4 chunks, 2 stages, K=2: windows [2, 2]
+    r = simulate_rotation([4], 2, 2)
+    # F(2)=3 + F2(2)=3 + F(2)=3 ticks, B scans 2*(3+3)
+    assert r.makespan == 3 + 3 + 3 + 2 * (3 + 3)
+    assert r.useful_time == 3 * 4 * 2
+    assert r.recompute_time == 2 * 2                    # 2 chunks x 2 stages
+    assert r.recompute_count == 2
+    assert r.peak_resident_chunks == 2
+    assert r.kv_capacity_slots == [4]                   # pow2(4-1) bucket
+    assert abs(r.bubble_ratio
+               - (2 * r.makespan - r.useful_time) / (2 * r.makespan)) < 1e-12
+
+
+def test_rotation_k_tradeoff_monotone():
+    """Larger K: fewer recomputes and fewer scan fills -> makespan and bubble
+    never increase; resident chunk-states never decrease."""
+    for S in (2, 4, 8):
+        prev = None
+        for k in (1, 2, 4, 8):
+            r = simulate_rotation([8, 3, 1], S, k)
+            assert r.recompute_count == max(8 - k, 0) + max(3 - k, 0)
+            if prev is not None:
+                assert r.makespan <= prev.makespan
+                assert r.bubble_ratio <= prev.bubble_ratio + 1e-12
+                assert r.peak_resident_chunks >= prev.peak_resident_chunks
+            prev = r
+
+
+def test_rotation_vs_1f1b_documented_delta():
+    """The rotation pays lockstep fill/drain every window scan, so at K=N it
+    degenerates to one F scan + one B scan: bubble = exactly the classic
+    (S-1)-per-scan fill cost. The 1F1B sim of the same uniform stream is the
+    asynchronous lower bound and must never be worse."""
+    S, n = 4, 8
+    rot = simulate_rotation([n], S, n)
+    total = S * rot.makespan
+    fill = 3 * S * (S - 1)          # F scan fill (1x) + B scan fill (2x)
+    assert total - rot.useful_time == fill
+    f1b = simulate_1f1b(sequences_to_microbatches([1.0] * n), S)
+    assert f1b.bubble_ratio <= rot.bubble_ratio + 1e-12
+    # at K=N on uniform chunks the two schedules coincide exactly
+    assert abs(f1b.bubble_ratio - rot.bubble_ratio) < 1e-12
