@@ -35,6 +35,8 @@ GATED = {
     "BENCH_pipeline.json": ["gate.*"],
     "BENCH_attention.json": ["compile_counts.chunk_fn_compiles"],
     "BENCH_serving.json": [],          # latency/throughput: report-only
+    "BENCH_cp.json": ["gate.*"],       # ring steps / balance / K/V bytes:
+                                       # deterministic planner+geometry math
 }
 
 REPORT_ONLY_SUFFIXES = ("_us", "_s")

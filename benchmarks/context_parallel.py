@@ -1,0 +1,119 @@
+"""Context-parallel ("seq" axis) benchmark — ring cost and balance analytics.
+
+All metrics are deterministic planner/geometry math (no devices needed, no
+walltime), so every scalar under ``gate`` is CI-gated by check_regression:
+
+  * ring steps: analytic ppermute counts (`dp_balance.ring_step_count` — the
+    CP executors report exactly this in ``stats.ring_steps``) for a paper-CDF
+    batch, per cp;
+  * per-rank token-work balance: planner imbalance with and without a
+    ``cp_threshold`` on a dp x cp mesh — the threshold keeps short units off
+    the ring, which REDUCES imbalance because a ring-eligible long-tail group
+    is costed at 1/cp and stops dominating its rank;
+  * peak per-device K/V bytes vs cp: the StateStore capacity shard
+    (cap/cp slots per rank, model geometry of granite-3-8b) plus the
+    circulating ring shard — the 1/cp scaling that removes the one-device
+    ChunkSize cap.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.core import dp_balance
+from repro.core.chunking import construct_chunks, group_chunks
+from repro.data.synthetic import LongTailSampler, PAPER_EVAL_CDF
+
+# batch=1024 at ChunkSize 2048 actually draws the paper CDF's tail (the
+# seed-0 batch contains a 74-chunk / 150K-token group) — smaller batches at
+# larger ChunkSize fold into equal bins and there is no ring story to tell
+CHUNK_SIZE = 2048
+GLOBAL_BATCH = 1024
+SEED = 0
+K = 2
+CPS = (1, 2, 4, 8)
+CP_THRESHOLD = 2 * CHUNK_SIZE        # units of >= 2 chunks ride the ring
+
+
+def _batch_units(cp: int, cp_threshold: int):
+    s = LongTailSampler(PAPER_EVAL_CDF, seed=SEED, max_len=262_144)
+    lengths = dict(enumerate(s.sample_batch_lengths(GLOBAL_BATCH)))
+    groups, standalone = group_chunks(construct_chunks(lengths, CHUNK_SIZE))
+    return dp_balance.units_from_chunks(groups, standalone, k=K, cp=cp,
+                                        cp_threshold=cp_threshold)
+
+
+def kv_bytes_per_device(cfg, n_chunks: int, cp: int) -> int:
+    """Peak per-device K/V for one group: the StateStore capacity shard
+    (cap/cp slots) + one circulating ring shard ((cap + C)/cp slots of k+v
+    for the layer currently in flight)."""
+    hd = cfg.resolved_head_dim
+    per_tok = 2 * cfg.padded_num_kv_heads * hd * 2          # k+v, bf16
+    cap = dp_balance.prefix_capacity(n_chunks, CHUNK_SIZE)
+    store = cfg.num_layers * cap // cp * per_tok
+    ring = (cap + CHUNK_SIZE) // cp * per_tok
+    return store + ring
+
+
+def run():
+    cfg = get_arch("granite-3-8b")
+    gate = {}
+    rows = []
+
+    longest = max(u.n_chunks for u in _batch_units(1, 0))
+    print(f"paper-CDF batch={GLOBAL_BATCH}, ChunkSize={CHUNK_SIZE}, K={K}, "
+          f"longest group = {longest} chunks")
+    print("cp,ring_steps,imbalance_all_ring,imbalance_thresholded,"
+          "kv_bytes_per_device_longest")
+    for cp in CPS:
+        units = _batch_units(cp, 0)
+        ring_steps = sum(
+            dp_balance.ring_step_count(u.n_chunks, cp, k=K,
+                                       n_layers=cfg.num_layers)
+            for u in units if u.ring)
+        # planner balance on a (dp=4) x cp mesh, all units on the ring vs
+        # only long-tail units (cp_threshold)
+        imb_all = dp_balance.plan_assignment(units, 4).imbalance
+        units_thr = _batch_units(cp, CP_THRESHOLD)
+        imb_thr = dp_balance.plan_assignment(units_thr, 4).imbalance
+        kvb = kv_bytes_per_device(cfg, longest, cp)
+        rows.append({"cp": cp, "ring_steps": ring_steps,
+                     "imbalance_all_ring": imb_all,
+                     "imbalance_thresholded": imb_thr,
+                     "kv_bytes_per_device_longest_group": kvb,
+                     "ring_units": sum(u.ring for u in units),
+                     "ring_units_thresholded": sum(u.ring for u in units_thr)})
+        print(f"{cp},{ring_steps},{imb_all:.4f},{imb_thr:.4f},{kvb}")
+        gate[f"ring_steps_cp{cp}"] = ring_steps
+        gate[f"imbalance_thresholded_cp{cp}"] = round(imb_thr, 6)
+        gate[f"kv_bytes_per_device_cp{cp}"] = kvb
+
+    # the point of the axis: per-device K/V scales ~1/cp
+    assert rows[-1]["kv_bytes_per_device_longest_group"] * (CPS[-1] // 2) \
+        < rows[0]["kv_bytes_per_device_longest_group"]
+    return {
+        "config": {"arch": cfg.name, "chunk_size": CHUNK_SIZE,
+                   "global_batch": GLOBAL_BATCH, "k": K, "seed": SEED,
+                   "cp_threshold": CP_THRESHOLD, "dp": 4},
+        "rows": rows,
+        "gate": gate,
+        "note": "all metrics are deterministic planner/geometry math "
+                "(gated in CI); ring_steps matches the executors' "
+                "stats.ring_steps accounting",
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=".")
+    args = ap.parse_args()
+    payload = run()
+    os.makedirs(args.json_dir, exist_ok=True)
+    path = os.path.join(args.json_dir, "BENCH_cp.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"[bench] wrote {path}")

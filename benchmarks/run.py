@@ -124,6 +124,9 @@ SECTIONS = [
     ("pipeline", "2D pipeline executor: bubble ratio + state bytes vs K "
      "(subprocess, 4 forced devices)",
      "benchmarks.pipeline", _run_pipeline_subprocess, {}, True),
+    ("cp", "Context parallelism: ring-step counts, cp_threshold balance, "
+     "per-device K/V bytes vs cp (deterministic planner/geometry math)",
+     "benchmarks.context_parallel", "run", {}, True),
     ("micro", "Microbenchmarks", "benchmarks.run", _run_micro, {}, True),
     ("roofline", "Roofline (from dryrun_results.jsonl if present)",
      "benchmarks.roofline", "run", {}, False),

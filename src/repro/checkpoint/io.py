@@ -33,11 +33,33 @@ def save_checkpoint(path: str, tree, step: int = 0):
     os.replace(tmp, path)
 
 
+def _treedef_diff(stored: str, expected: str) -> str:
+    """Point at the first divergence between two treedef reprs — two trees
+    with the SAME leaf count can differ only in structure, and restoring
+    across that silently fills the wrong slots."""
+    n = next((i for i, (a, b) in enumerate(zip(stored, expected)) if a != b),
+             min(len(stored), len(expected)))
+    ctx = 40
+    return (f"first divergence at char {n}:\n"
+            f"  stored:    ...{stored[max(0, n - ctx):n + ctx]}...\n"
+            f"  restoring: ...{expected[max(0, n - ctx):n + ctx]}...")
+
+
 def restore_checkpoint(path: str, like):
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    """Restore into the structure of ``like`` (treedef, shapes and dtypes
+    validated — a structure mismatch raises instead of silently restoring
+    leaves into the wrong slots)."""
     with open(path, "rb") as f:
         blob = msgpack.unpackb(f.read())
     leaves, treedef = jax.tree.flatten(like)
+    stored_td = blob["tree"].get("treedef")
+    if stored_td is not None and stored_td != str(treedef):
+        raise ValueError(
+            f"checkpoint treedef mismatch in {path!r}: the stored pytree "
+            "structure differs from the restore target "
+            f"({_treedef_diff(stored_td, str(treedef))})\n"
+            f"  stored treedef:    {stored_td}\n"
+            f"  restore-target:    {treedef}")
     stored = blob["tree"]["leaves"]
     assert len(stored) == len(leaves), (len(stored), len(leaves))
     out = []

@@ -50,6 +50,7 @@ class SchedulerStats:
     recompute_calls: int = 0
     backward_calls: int = 0
     max_live_residuals: int = 0
+    ring_steps: int = 0       # context-parallel ppermute hops (0 without CP)
 
 
 # ---------------------------------------------------------- chunk fn --------
@@ -113,16 +114,22 @@ def _prefix_meta_write(meta, batch, cfg, offset: int):
 # ------------------------------------------------------------ executor ------
 def run_group(cfg: ModelConfig, params, chunk_batches, *, k: int = 1,
               loss_scale: float = 1.0, grads=None,
-              blockwise_threshold: int = 8192, stats: SchedulerStats = None):
+              blockwise_threshold: int = 8192, stats: SchedulerStats = None,
+              chunk_fn=None):
     """Run Algorithm 2 over one dependent-chunk group (or a singleton
     standalone chunk). Returns (total_loss, grads, stats).
 
     Static shapes: the KV prefix is allocated once at the group's bucketed
     capacity (`ss.prefix_capacity`) and each chunk's own K/V is written in at
     offset i*C, so every chunk step in a bucket shares one compiled
-    executable (the unused tail keeps seg=0 and is exactly masked)."""
+    executable (the unused tail keeps seg=0 and is exactly masked).
+
+    chunk_fn: optional (params, prefix, batch) -> (loss, own) override —
+    the context-parallel executor swaps in its shard_map ring trunk here;
+    the Algorithm-2 schedule, StateStore threading and cotangent routing
+    stay identical."""
     stats = stats or SchedulerStats()
-    f = _jitted_chunk_fn(cfg, blockwise_threshold)
+    f = chunk_fn or _jitted_chunk_fn(cfg, blockwise_threshold)
     n = len(chunk_batches)
     B = chunk_batches[0]["tokens"].shape[0]
     C = chunk_batches[0]["tokens"].shape[1]
@@ -198,7 +205,7 @@ def _batch_loss_scale(groups, standalone) -> float:
 
 def run_batch(cfg: ModelConfig, params, groups, standalone, *, k: int = 1,
               blockwise_threshold: int = 8192, mesh=None,
-              plan_policy: str = "lpt"):
+              plan_policy: str = "lpt", cp_threshold: int = 0):
     """One full training micro-iteration over the chunks of a sampled batch:
     every dependent group via Algorithm 2, every standalone chunk as a
     singleton group; gradients accumulate across all of them (paper Fig. 3).
@@ -207,10 +214,14 @@ def run_batch(cfg: ModelConfig, params, groups, standalone, *, k: int = 1,
     Returns (mean_loss, grads, stats).
 
     mesh: optional jax mesh. With a "pipe" axis of size > 1 the batch runs
-    on the 2D (data x pipe) K-retention rotation pipeline
+    on the (data x pipe [x seq]) K-retention rotation pipeline
     (`distributed.pipeline.run_batch_pipelined` — Algorithm 2 at pipeline
-    scale, K bounding live residual chunk-states per stage). Otherwise, with
-    >1 DP devices the batch is executed by the DP orchestrator
+    scale, K bounding live residual chunk-states per stage). With a "seq"
+    axis of size > 1 (and no pipe axis) the batch runs on the
+    context-parallel ring executor (`distributed.context_parallel
+    .run_batch_cp`: chunk tokens sharded over "seq", K/V circulating via
+    ppermute; ``cp_threshold`` keeps short chunks off the ring). Otherwise,
+    with >1 DP devices the batch is executed by the DP orchestrator
     (`_run_batch_dp`): the dp_balance planner assigns units to ranks and the
     work runs as batch-dim-sharded waves. With a 1-device mesh (or
     mesh=None) this is the plain single-device path — bit-for-bit the
@@ -219,7 +230,14 @@ def run_batch(cfg: ModelConfig, params, groups, standalone, *, k: int = 1,
         from repro.distributed import pipeline
         return pipeline.run_batch_pipelined(
             cfg, params, groups, standalone, mesh, k=k,
-            blockwise_threshold=blockwise_threshold, plan_policy=plan_policy)
+            blockwise_threshold=blockwise_threshold, plan_policy=plan_policy,
+            cp_threshold=cp_threshold)
+    if mesh is not None and sharding.seq_size(mesh) > 1:
+        from repro.distributed import context_parallel
+        return context_parallel.run_batch_cp(
+            cfg, params, groups, standalone, mesh, k=k,
+            blockwise_threshold=blockwise_threshold, plan_policy=plan_policy,
+            cp_threshold=cp_threshold)
     if mesh is not None and sharding.dp_size(mesh) > 1:
         return _run_batch_dp(cfg, params, groups, standalone, mesh, k=k,
                              blockwise_threshold=blockwise_threshold,
@@ -275,6 +293,46 @@ def stack_wave_slots(cfg: ModelConfig, wave, mesh):
     return slots
 
 
+def run_planned_waves(cfg: ModelConfig, params, units, mesh, *, k: int,
+                      scale: float, blockwise_threshold: int = 8192,
+                      plan_policy: str = "lpt", chunk_fn_for_wave=None,
+                      wave_done=None):
+    """Shared wave orchestration for the DP and context-parallel executors:
+    plan the units onto ranks, stack each lockstep wave into (R, C) slots,
+    run each wave through the Algorithm-2 executor. Returns
+    (total_loss, grads, stats).
+
+    chunk_fn_for_wave: optional (wave, slots) -> chunk_fn override for
+    `run_group` (None = the default jitted chunk fn) — the CP executor
+    swaps in its ring trunk per wave here.
+    wave_done: optional (wave, slots, stats, n_fwd, n_bwd) callback after
+    each wave (n_fwd counts forwards incl. recomputes) — used for ring-hop
+    accounting."""
+    plan = dp_balance.plan_assignment(units, sharding.dp_size(mesh),
+                                      policy=plan_policy)
+    waves, _ = dp_balance.wave_schedule(plan)
+
+    params_r = sharding.replicate_put(mesh, params)
+    grads, total_loss = None, 0.0
+    stats = SchedulerStats()
+    for wave in waves:
+        slots = stack_wave_slots(cfg, wave, mesh)
+        fn = chunk_fn_for_wave(wave, slots) if chunk_fn_for_wave else None
+        f0 = stats.forward_calls + stats.recompute_calls
+        b0 = stats.backward_calls
+        l, grads, stats = run_group(cfg, params_r, slots, k=k,
+                                    loss_scale=scale, grads=grads,
+                                    stats=stats,
+                                    blockwise_threshold=blockwise_threshold,
+                                    chunk_fn=fn)
+        if wave_done is not None:
+            wave_done(wave, slots, stats,
+                      stats.forward_calls + stats.recompute_calls - f0,
+                      stats.backward_calls - b0)
+        total_loss = total_loss + l
+    return total_loss, grads, stats
+
+
 def _run_batch_dp(cfg: ModelConfig, params, groups, standalone, mesh, *,
                   k: int = 1, blockwise_threshold: int = 8192,
                   plan_policy: str = "lpt"):
@@ -299,18 +357,6 @@ def _run_batch_dp(cfg: ModelConfig, params, groups, standalone, mesh, *,
     scale = _batch_loss_scale(groups, standalone)
     units = dp_balance.units_from_materialized(groups, standalone, k=k,
                                                static_shapes=True)
-    plan = dp_balance.plan_assignment(units, sharding.dp_size(mesh),
-                                      policy=plan_policy)
-    waves, _ = dp_balance.wave_schedule(plan)
-
-    params_r = sharding.replicate_put(mesh, params)
-    grads, total_loss = None, 0.0
-    stats = SchedulerStats()
-    for wave in waves:
-        slots = stack_wave_slots(cfg, wave, mesh)
-        l, grads, stats = run_group(cfg, params_r, slots, k=k,
-                                    loss_scale=scale, grads=grads,
-                                    stats=stats,
-                                    blockwise_threshold=blockwise_threshold)
-        total_loss = total_loss + l
-    return total_loss, grads, stats
+    return run_planned_waves(cfg, params, units, mesh, k=k, scale=scale,
+                             blockwise_threshold=blockwise_threshold,
+                             plan_policy=plan_policy)

@@ -76,16 +76,51 @@ def chunk_token_work(tokens_used: int, prefix_len: int, seg_lengths=None, *,
 class WorkUnit:
     """One indivisible piece of DP work: a dependent group or a standalone
     packed chunk. ``payload`` is opaque to the planner (the executor stores
-    its list of materialized chunk batches there)."""
+    its list of materialized chunk batches there). ``ring`` marks units the
+    context-parallel executor will run sharded over the "seq" axis (their
+    ``work`` is already divided by cp — a CP group acts as one fast logical
+    rank); non-ring units replicate over "seq" and keep their full cost."""
     kind: str                    # "group" | "standalone"
     key: Any                     # group id / standalone index (for reports)
     n_chunks: int
     work: float
     payload: Any = None
+    ring: bool = False
 
     def __repr__(self):
         return (f"WorkUnit({self.kind}:{self.key}, n={self.n_chunks}, "
-                f"work={self.work:.1f})")
+                f"work={self.work:.1f}{', ring' if self.ring else ''})")
+
+
+def cp_eligible(n_chunks: int, chunk_size: int, cp: int,
+                cp_threshold: int) -> bool:
+    """Whether a unit runs on the ring: CP pays ppermute latency every hop,
+    which only amortizes on long-tail chunk spans. ``cp_threshold`` is the
+    minimum unit token span (n_chunks * ChunkSize — the static-shape span
+    the executor actually computes); 0 means every unit rides the ring."""
+    return cp > 1 and n_chunks * chunk_size >= cp_threshold
+
+
+def ring_hops(n_fwd: int, n_bwd: int, cp: int, n_layers: int = 1) -> int:
+    """ppermute hops for ``n_fwd`` forward (incl. recompute) and ``n_bwd``
+    backward chunk executions on a cp-rank ring: cp-1 K/V rotations per
+    forward, cp per backward (the dk/dv accumulator takes one extra hop
+    home), per attention layer. Single source of truth for the ring cost —
+    the CP executors' ``stats.ring_steps`` and the analytic
+    `ring_step_count` both derive from it."""
+    if cp <= 1:
+        return 0
+    return n_layers * ((cp - 1) * n_fwd + cp * n_bwd)
+
+
+def ring_step_count(n_chunks: int, cp: int, k: int = 1,
+                    n_layers: int = 1) -> int:
+    """Analytic `ring_hops` for one ring unit under Algorithm 2: every chunk
+    pays one forward + one backward, and the first N-K pay one recompute
+    forward."""
+    n = n_chunks
+    rec = max(n - max(1, k), 0)
+    return ring_hops(n + rec, n, cp, n_layers)
 
 
 def unit_work(chunk_works, k: int = 1) -> float:
@@ -96,15 +131,27 @@ def unit_work(chunk_works, k: int = 1) -> float:
     return 3.0 * sum(w) + sum(w[:keep_from])
 
 
+def _cp_adjust(work: float, n_chunks: int, chunk_size: int, cp: int,
+               cp_threshold: int):
+    """-> (work, ring). A ring unit's span is token-sharded over cp devices,
+    so the CP group behaves as one logical rank at 1/cp the cost."""
+    if cp_eligible(n_chunks, chunk_size, cp, cp_threshold):
+        return work / cp, True
+    return work, False
+
+
 def units_from_chunks(groups: dict, standalone: list, *, k: int = 1,
                       horizon: int = ATTN_HORIZON,
-                      static_shapes: bool = False) -> list:
+                      static_shapes: bool = False, cp: int = 1,
+                      cp_threshold: int = 0) -> list:
     """Build WorkUnits from Algorithm-1 output (`chunking.group_chunks`).
 
     groups: {group_id: [Chunk ordered]}; standalone: [Chunk].
     static_shapes: cost dependent chunks at the capacity-padded KV length
     (what the static-shape StateStore actually computes — masked slots still
-    burn FLOPs) instead of the exact grow-by-C prefix."""
+    burn FLOPs) instead of the exact grow-by-C prefix.
+    cp/cp_threshold: context-parallel degree and ring-eligibility span (see
+    `cp_eligible`)."""
     units = []
     for gid, chunks in groups.items():
         cap = prefix_capacity(len(chunks), chunks[0].chunk_size)
@@ -113,14 +160,18 @@ def units_from_chunks(groups: dict, standalone: list, *, k: int = 1,
                                   else c.index_in_group * c.chunk_size,
                                   horizon=horizon)
                  for c in chunks]
-        units.append(WorkUnit("group", gid, len(chunks),
-                              unit_work(works, k=k), payload=chunks))
+        w, ring = _cp_adjust(unit_work(works, k=k), len(chunks),
+                             chunks[0].chunk_size, cp, cp_threshold)
+        units.append(WorkUnit("group", gid, len(chunks), w, payload=chunks,
+                              ring=ring))
     for idx, c in enumerate(standalone):
         w = chunk_token_work(c.tokens_used, 0,
                              seg_lengths=[it.length for it in c.items],
                              horizon=horizon)
-        units.append(WorkUnit("standalone", idx, 1, unit_work([w], k=k),
-                              payload=[c]))
+        w, ring = _cp_adjust(unit_work([w], k=k), 1, c.chunk_size, cp,
+                             cp_threshold)
+        units.append(WorkUnit("standalone", idx, 1, w, payload=[c],
+                              ring=ring))
     return units
 
 
@@ -141,26 +192,32 @@ def _batch_chunk_work(chunk_batch, index_in_group: int, dependent: bool, *,
 
 def units_from_materialized(group_batches: list, standalone_batches: list, *,
                             k: int = 1, horizon: int = ATTN_HORIZON,
-                            static_shapes: bool = False) -> list:
+                            static_shapes: bool = False, cp: int = 1,
+                            cp_threshold: int = 0) -> list:
     """Build WorkUnits from `launch.train.build_host_batches` output:
     group_batches: list[list[chunk_batch dict]]; standalone: [chunk_batch].
     Prefer host (numpy) batches — device arrays cost one blocking readback
-    per chunk here. static_shapes: see `units_from_chunks`."""
+    per chunk here. static_shapes / cp / cp_threshold: see
+    `units_from_chunks`."""
     units = []
     for gid, batches in enumerate(group_batches):
         cap = None
+        C = int(np.asarray(batches[0]["segment_ids"]).shape[1])
         if static_shapes and batches:
-            C = int(np.asarray(batches[0]["segment_ids"]).shape[1])
             cap = prefix_capacity(len(batches), C)
         works = [_batch_chunk_work(b, i, True, horizon=horizon,
                                    prefix_override=cap)
                  for i, b in enumerate(batches)]
-        units.append(WorkUnit("group", gid, len(batches),
-                              unit_work(works, k=k), payload=batches))
+        w, ring = _cp_adjust(unit_work(works, k=k), len(batches), C, cp,
+                             cp_threshold)
+        units.append(WorkUnit("group", gid, len(batches), w,
+                              payload=batches, ring=ring))
     for idx, b in enumerate(standalone_batches):
+        C = int(np.asarray(b["segment_ids"]).shape[1])
         w = _batch_chunk_work(b, 0, False, horizon=horizon)
-        units.append(WorkUnit("standalone", idx, 1, unit_work([w], k=k),
-                              payload=[b]))
+        w, ring = _cp_adjust(unit_work([w], k=k), 1, C, cp, cp_threshold)
+        units.append(WorkUnit("standalone", idx, 1, w, payload=[b],
+                              ring=ring))
     return units
 
 

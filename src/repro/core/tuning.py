@@ -4,17 +4,24 @@
 ChunkSize and K and select the best combination for optimal performance."
 
 Without pipeline parallelism the paper's rule is closed-form: K=1 and the
-largest ChunkSize that fits memory. With PP, the schedule simulator scores
-each candidate on batches sampled from the actual length distribution
-(more chunks = fewer bubbles, bigger chunks = better per-token efficiency),
-subject to the K*ChunkSize activation-memory budget.
+largest ChunkSize that fits memory. With PP, each candidate is scored on
+batches sampled from the actual length distribution (more chunks = fewer
+bubbles, bigger chunks = better per-token efficiency), subject to the
+K*ChunkSize activation-memory budget — using ``schedule_sim
+.simulate_rotation``, the closed form of the rotation schedule the PR-4
+executor (``distributed.pipeline.run_batch_pipelined``) actually runs.
+Scoring with ``simulate_1f1b`` (the pre-PR-4 behavior) models Megatron's
+per-rank variable-duration schedule instead: short chunks cost less than a
+tick there, while the rotation executes every capacity-padded slot as one
+uniform tick — so 1F1B scores could rank candidates differently from the
+measured makespan (tests/test_tuning.py pins the fix).
 """
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core.chunking import construct_chunks
-from repro.core.schedule_sim import chunks_to_microbatches, simulate_1f1b
+from repro.core.chunking import construct_chunks, group_chunks
+from repro.core.schedule_sim import chunks_to_microbatches, simulate_rotation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,12 +40,27 @@ def seq_time(tokens, overhead=2000.0):
     return tokens + overhead
 
 
+def rotation_wave_sizes(chunks) -> list:
+    """Chunk count of each lockstep wave the rotation executor would run for
+    this batch at dp=1: one wave per dependent group plus one single-chunk
+    wave per packed standalone chunk (`dp_balance.wave_schedule` with
+    world_size=1 — every unit is its own wave, and wave order does not
+    change the additive makespan)."""
+    groups, standalone = group_chunks(chunks)
+    return [len(g) for g in groups.values()] + [1] * len(standalone)
+
+
 def grid_search(batches, *, pp: int, memory_token_budget: int,
                 chunk_sizes=(2048, 4096, 8192, 16384, 32768),
                 ks=(1, 2, 4, 8, 16)):
     """batches: list of {seq_id: length} dicts sampled from the real data
     distribution. memory_token_budget: max K*ChunkSize live activation
-    tokens. Returns TuneResult; K is forced to 1 when pp == 1 (paper §5)."""
+    tokens. Returns TuneResult; K is forced to 1 when pp == 1 (paper §5).
+
+    pp > 1 candidates are scored in ``simulate_rotation`` units — every
+    rotation tick processes one capacity-padded ChunkSize slot, costed at
+    ``seq_time(chunk_size)`` — matching `PipelineStats.makespan_units` from
+    the real executor tick for tick."""
     if pp == 1:
         ks = (1,)
     table = {}
@@ -49,14 +71,16 @@ def grid_search(batches, *, pp: int, memory_token_budget: int,
             total = 0.0
             for lengths in batches:
                 chunks = construct_chunks(lengths, cs)
-                mbs = chunks_to_microbatches(chunks, k=k)
-                mbs = [dataclasses.replace(m, fwd=seq_time(m.fwd))
-                       for m in mbs]
                 if pp == 1:
+                    mbs = chunks_to_microbatches(chunks, k=k)
+                    mbs = [dataclasses.replace(m, fwd=seq_time(m.fwd))
+                           for m in mbs]
                     total += sum(3.0 * m.fwd + (m.fwd if m.recompute else 0.0)
                                  for m in mbs)
                 else:
-                    total += simulate_1f1b(mbs, pp, state_aware=True).makespan
+                    total += simulate_rotation(
+                        rotation_wave_sizes(chunks), pp, k,
+                        unit=seq_time(cs)).makespan
             table[(cs, k)] = total / len(batches)
     best = min(table, key=table.get)
     return TuneResult(chunk_size=best[0], k=best[1], score=table[best],

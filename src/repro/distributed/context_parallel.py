@@ -1,0 +1,167 @@
+"""Context-parallel ("seq" axis) chunk execution — ring flash attention.
+
+ChunkFlow bounds peak activation memory by ChunkSize, but a single chunk's
+attention still runs on one device, so ChunkSize (and with it long-tail
+throughput) is capped by one accelerator's HBM. This module removes that cap
+the FlexSP / FPDT way: a chunk's tokens are sharded over a third mesh axis
+``"seq"`` and its K/V circulates around the CP group as a ``ppermute`` ring
+(ring flash attention — per-hop partials merged with the online-softmax LSE
+residual, the existing Pallas ``custom_vjp`` backward reused per hop; see
+``kernels.chunked_attention.ring_chunked_prefix_attention``).
+
+Sharding contract (the AD-safe one — every shard_map input/output that
+carries gradient is *sharded*, only params are replicated, matching the
+pipeline executor's proven pattern):
+
+  * Q / activations / logits: token dim sharded over "seq". Pointwise layer
+    math needs no communication; the loss sum happens outside shard_map in
+    GSPMD-land on the reassembled logits.
+  * StateStore prefix K/V (and its pos/seg metadata): capacity dim sharded
+    over "seq" — rank i holds the contiguous [i*cap/cp, (i+1)*cap/cp) slice,
+    which IS its ring shard (prefix slice ++ own-token K/V). Peak per-device
+    K/V therefore scales 1/cp.
+  * Own-chunk K/V leaves shard_map token-sharded; `ss.write_own` then updates
+    the seq-sharded prefix buffer in GSPMD-land, so the Algorithm-2 executor
+    (run_group) is reused unchanged — only the chunk fn differs.
+
+The dp_balance planner treats a CP group as ONE logical (faster) rank:
+eligible units' token-work is divided by cp and ineligible (short) units
+keep full cost and run seq-replicated — `cp_threshold` keeps sub-ring-latency
+chunks off the ring (`dp_balance.cp_eligible`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import dp_balance
+from repro.distributed import sharding
+from repro.distributed.compat import shard_map
+from repro.models import api
+from repro.models import layers as L
+
+AXIS = "seq"
+
+# Trace-time log of the jitted CP chunk fn — one entry per Python retrace
+# (== per fresh XLA compile), recording (cfg, cp, prefix_capacity, rows, C).
+CP_TRACE_EVENTS: list = []
+
+
+def reset_cp_trace_log():
+    CP_TRACE_EVENTS.clear()
+    _cp_chunk_fn.cache_clear()
+
+
+@functools.lru_cache(maxsize=None)
+def _cp_chunk_fn(cfg: ModelConfig, blockwise_threshold: int, mesh, cp: int):
+    """Jitted Algorithm-2 chunk fn with the transformer trunk under a
+    shard_map over ("data", "seq"): (params, prefix, batch) -> (loss, own).
+    Drop-in replacement for `chunked_step._jitted_chunk_fn` on ring waves.
+    Mirrors `api._decoder_forward` exactly (per-layer windows, prefix
+    pos/seg metadata) so CP losses and grads match single-device to <=1e-5.
+    """
+    win_np = api._layer_windows(cfg)
+
+    def trunk(layer_params, windows, x, pos, seg, pk, pv, p_pos, p_seg):
+        # x: (r, C/cp, D) this rank's token shard; pk/pv: (L, r, cap/cp,
+        # Hkv, hd) this rank's contiguous StateStore ring shard.
+        def layer_fn(x, xs):
+            lp, window, k_ring, v_ring = xs
+            prefix = {"k": k_ring, "v": v_ring, "pos": p_pos, "seg": p_seg}
+            h, new_kv = L.attention_layer(
+                lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+                positions=pos, segment_ids=seg, prefix=prefix, window=window,
+                blockwise_threshold=blockwise_threshold, cp_axis=AXIS, cp=cp)
+            x = x + h
+            h2 = L.swiglu_mlp(lp["mlp"], L.rms_norm(x, lp["ln2"],
+                                                    cfg.norm_eps))
+            return x + h2, new_kv
+
+        y, new_kv = jax.lax.scan(layer_fn, x,
+                                 (layer_params, windows, pk, pv))
+        return y, new_kv["k"], new_kv["v"]
+
+    def f(params, prefix, batch):
+        from repro.core.chunked_step import token_nll_sum
+        R, C = batch["tokens"].shape
+        cap = prefix["k"].shape[2]
+        CP_TRACE_EVENTS.append((cfg.name, cp, cap, R, C))
+        x = params["embed"][batch["tokens"]]
+        windows = jnp.asarray(win_np)
+        outs, ok, ov = shard_map(
+            trunk, mesh=mesh,
+            in_specs=(P(), P(),
+                      P("data", AXIS),          # x (R, C, D)
+                      P("data", AXIS),          # positions
+                      P("data", AXIS),          # segment_ids
+                      P(None, "data", AXIS),    # prefix k (L, R, cap, H, hd)
+                      P(None, "data", AXIS),    # prefix v
+                      P("data", AXIS),          # prefix_pos (R, cap)
+                      P("data", AXIS)),         # prefix_seg
+            out_specs=(P("data", AXIS), P(None, "data", AXIS),
+                       P(None, "data", AXIS)),
+            check_vma=False,
+        )(params["layers"], windows, x, batch["positions"],
+          batch["segment_ids"], prefix["k"], prefix["v"],
+          batch["prefix_pos"], batch["prefix_seg"])
+        xg = L.rms_norm(outs, params["ln_f"], cfg.norm_eps)
+        logits = api._unembed(cfg, params, xg)
+        loss = token_nll_sum(logits, batch["labels"], batch["loss_mask"])
+        own = {"k": ok, "v": ov}
+        return loss, own
+
+    return jax.jit(f)
+
+
+def ring_wave(wave) -> bool:
+    """A lockstep wave rides the ring iff any of its units is ring-eligible
+    (eligibility is monotone in chunk count, every unit is padded to the
+    wave's longest anyway, and C is uniform — so this equals 'the wave's
+    largest unit is eligible')."""
+    return any(u is not None and u.ring for u in wave)
+
+
+def run_batch_cp(cfg: ModelConfig, params, groups, standalone, mesh, *,
+                 k: int = 1, blockwise_threshold: int = 8192,
+                 plan_policy: str = "lpt", cp_threshold: int = 0):
+    """One training micro-iteration on a (data x seq) context-parallel mesh.
+
+    Same wave orchestration as `chunked_step._run_batch_dp` (so DP x CP
+    composes for free: with dp == 1 every wave is a single unit and the
+    per-unit `cp_threshold` decision is exact); ring-eligible waves swap the
+    chunk fn for the shard_map ring trunk. Numerically equivalent to the
+    single-device `run_batch` to <=1e-5 (tests/test_context_parallel.py).
+    """
+    if cfg.family != "dense":
+        raise NotImplementedError(
+            "context-parallel executor supports stacked dense decoders; "
+            f"family={cfg.family!r}")
+    from repro.core import chunked_step as cs
+
+    cp = sharding.seq_size(mesh)
+    scale = cs._batch_loss_scale(groups, standalone)
+    units = dp_balance.units_from_materialized(
+        groups, standalone, k=k, static_shapes=True, cp=cp,
+        cp_threshold=cp_threshold)
+
+    def _ring(wave, slots):
+        return ring_wave(wave) and slots[0]["tokens"].shape[1] % cp == 0
+
+    def chunk_fn_for_wave(wave, slots):
+        if _ring(wave, slots):
+            return _cp_chunk_fn(cfg, blockwise_threshold, mesh, cp)
+        return None
+
+    def wave_done(wave, slots, stats, n_fwd, n_bwd):
+        if _ring(wave, slots):
+            stats.ring_steps += dp_balance.ring_hops(n_fwd, n_bwd, cp,
+                                                     cfg.num_layers)
+
+    return cs.run_planned_waves(
+        cfg, params, units, mesh, k=k, scale=scale,
+        blockwise_threshold=blockwise_threshold, plan_policy=plan_policy,
+        chunk_fn_for_wave=chunk_fn_for_wave, wave_done=wave_done)

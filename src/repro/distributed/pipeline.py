@@ -68,7 +68,8 @@ def split_stages(layer_params, n_stages: int):
 
 
 def _stage_apply(cfg: ModelConfig, stage_layers, windows, x, pos, seg,
-                 kbuf, vbuf, p_pos, p_seg, blockwise_threshold: int):
+                 kbuf, vbuf, p_pos, p_seg, blockwise_threshold: int,
+                 cp: int = 1, cp_axis: str = "seq"):
     """Run this stage's layer slab over one chunk.
 
     kbuf/vbuf: (Lp, B, cap, Hkv, hd) resident K/V of earlier chunks;
@@ -77,6 +78,10 @@ def _stage_apply(cfg: ModelConfig, stage_layers, windows, x, pos, seg,
     Mirrors api._decoder_forward's layer body exactly so the pipeline is
     numerically identical to the single-device chunk fn.
     Returns (y, new_k (Lp,B,T,Hkv,hd), new_v).
+
+    With ``cp > 1`` all token dims (x/pos/seg and the kbuf/vbuf capacity
+    dim) are this rank's "seq" shard and attention runs as a ppermute ring
+    over ``cp_axis``; the returned new K/V is the local token shard.
     """
     def layer_fn(x, xs):
         lp, window, pk, pv = xs
@@ -84,7 +89,8 @@ def _stage_apply(cfg: ModelConfig, stage_layers, windows, x, pos, seg,
         h, new_kv = L.attention_layer(
             lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
             positions=pos, segment_ids=seg, prefix=prefix, window=window,
-            blockwise_threshold=blockwise_threshold)
+            blockwise_threshold=blockwise_threshold,
+            cp_axis=(cp_axis if cp > 1 else None), cp=cp)
         x = x + h
         h2 = L.swiglu_mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps))
         return x + h2, new_kv
@@ -228,6 +234,7 @@ class PipelineStats:
     recompute_calls: int = 0
     backward_calls: int = 0
     max_live_residuals: int = 0        # live residual chunk-states (<= K)
+    ring_steps: int = 0                # context-parallel ppermute hops
     # tick accounting, in simulate_rotation units (F tick = 1, B tick = 2)
     makespan_units: float = 0.0
     useful_units: float = 0.0          # F + B work summed across stages
@@ -253,9 +260,17 @@ def _windows_slab(cfg: ModelConfig, n_stages: int):
 
 @functools.lru_cache(maxsize=None)
 def _window_step_fn(cfg: ModelConfig, mesh, n_stages: int,
-                    blockwise_threshold: int, axis: str):
+                    blockwise_threshold: int, axis: str, cp: int = 1):
     """Jitted loss/state fn for ONE rotation window: (params, kv, batch) ->
-    (loss, kv_out). Compiles once per (window, capacity, rows) shape."""
+    (loss, kv_out). Compiles once per (window, capacity, rows) shape.
+
+    cp > 1 adds context parallelism inside the same shard_map: token dims
+    (x/pos/seg and the K/V capacity dim) shard over "seq", attention runs
+    the ppermute ring per tick, and each chunk's own K/V is all-gathered
+    over "seq" then written by the rank whose StateStore shard owns its
+    slot (the write region [off, off+C) lies inside one shard — waves where
+    it wouldn't, cap/cp % C != 0, fall back to cp=1 seq-replication).
+    """
     win_np = _windows_slab(cfg, n_stages)
 
     def body(stage_layers, windows, kv, x_mbs, pos_mbs, seg_mbs,
@@ -264,9 +279,11 @@ def _window_step_fn(cfg: ModelConfig, mesh, n_stages: int,
         S = n_stages
         stage_layers = jax.tree.map(lambda a: a[0], stage_layers)
         windows = windows[0]
-        kbuf, vbuf = kv["k"], kv["v"]          # (Lp, r, cap, Hkv, hd)
-        W, r, C, D = x_mbs.shape
+        kbuf, vbuf = kv["k"], kv["v"]          # (Lp, r, cap, Hkv, hd) local
+        W, r, C, D = x_mbs.shape               # C, cap: "seq"-local lengths
         Lp, _, cap, Hkv, hd = kbuf.shape
+        Cg = C * cp                            # global chunk length
+        iq = jax.lax.axis_index("seq") if cp > 1 else 0
 
         def varying(x):
             return pcast_varying(x, (axis,))
@@ -284,17 +301,26 @@ def _window_step_fn(cfg: ModelConfig, mesh, n_stages: int,
             x_in = jnp.where(s == 0, x_mbs[j], state)
             y, nk, nv = _stage_apply(
                 cfg, stage_layers, windows, x_in, pos_mbs[j], seg_mbs[j],
-                kbuf, vbuf, ppos_mbs[j], pseg_mbs[j], blockwise_threshold)
+                kbuf, vbuf, ppos_mbs[j], pseg_mbs[j], blockwise_threshold,
+                cp=cp)
 
-            if cap >= C:       # store this chunk's K/V at its slot offset
+            if cap >= Cg:      # store this chunk's K/V at its slot offset
                 write = (valid & (write_flags[j] > 0)).astype(kbuf.dtype)
-                off = offsets[j]
+                off = offsets[j]               # global slot offset (g * Cg)
+                if cp > 1:
+                    # gather the token-sharded own K/V; only the rank whose
+                    # contiguous StateStore shard owns [off, off+Cg) writes
+                    nk = jax.lax.all_gather(nk, "seq", axis=2, tiled=True)
+                    nv = jax.lax.all_gather(nv, "seq", axis=2, tiled=True)
+                    owner = off // cap
+                    off = off - owner * cap    # offset within the shard
+                    write = write * (owner == iq).astype(kbuf.dtype)
                 upd = jax.lax.dynamic_slice(
-                    kbuf, (0, 0, off, 0, 0), (Lp, r, C, Hkv, hd))
+                    kbuf, (0, 0, off, 0, 0), (Lp, r, Cg, Hkv, hd))
                 kbuf = jax.lax.dynamic_update_slice(
                     kbuf, upd * (1 - write) + nk * write, (0, 0, off, 0, 0))
                 upd = jax.lax.dynamic_slice(
-                    vbuf, (0, 0, off, 0, 0), (Lp, r, C, Hkv, hd))
+                    vbuf, (0, 0, off, 0, 0), (Lp, r, Cg, Hkv, hd))
                 vbuf = jax.lax.dynamic_update_slice(
                     vbuf, upd * (1 - write) + nv * write, (0, 0, off, 0, 0))
 
@@ -315,17 +341,21 @@ def _window_step_fn(cfg: ModelConfig, mesh, n_stages: int,
     def f(params, kv, batch):
         W, R, C = batch["tokens"].shape
         cap = kv["k"].shape[2]
-        PIPE_TRACE_EVENTS.append((cfg.name, W, cap, R, C))
+        PIPE_TRACE_EVENTS.append((cfg.name, W, cap, R, C, cp))
         from repro.core.chunked_step import token_nll_sum
         stage_layers = split_stages(params["layers"], n_stages)
         windows = jnp.asarray(win_np)
         x_mbs = params["embed"][batch["tokens"]]
+        # "seq" shards every token dim (x/pos/seg dim 2, K/V capacity dim 2)
+        # when cp > 1; unmentioned with cp == 1 (replicated — bit-identical
+        # to the 2D executor).
+        tok = (P(None, "data", "seq") if cp > 1 else P(None, "data"))
+        kvs = (P(axis, "data", "seq") if cp > 1 else P(axis, "data"))
         outs, kv_out = shard_map(
             body, mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis, "data"), P(None, "data"),
-                      P(None, "data"), P(None, "data"), P(None, "data"),
-                      P(None, "data"), P(), P()),
-            out_specs=(P(None, "data"), P(axis, "data")),
+            in_specs=(P(axis), P(axis), kvs, tok, tok, tok, tok, tok,
+                      P(), P()),
+            out_specs=(tok, kvs),
             check_vma=False,
         )(stage_layers, windows, kv, x_mbs, batch["positions"],
           batch["segment_ids"], batch["prefix_pos"], batch["prefix_seg"],
@@ -349,13 +379,17 @@ def _tree_bytes(tree) -> int:
 def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
                         mesh, n_stages: int, loss_scale: float, grads,
                         stats: PipelineStats, blockwise_threshold: int,
-                        axis: str = "pipe"):
+                        axis: str = "pipe", cp: int = 1):
     """Algorithm 2 over one lockstep wave of chunk slots, pipelined.
 
     slots: list of (R, C) stacked chunk batches (one row per DP rank, dummy
     rows fully masked). Windows of at most K slots run as rotation scans;
     only the last window's forward keeps residuals, earlier windows are
     re-forwarded right before their backward (F2). Returns (loss, grads).
+
+    cp > 1: this wave rides the "seq" ring — the caller has already checked
+    eligibility (C % cp == 0 and the per-rank StateStore shard holds whole
+    chunk slots, cap/cp % C == 0).
     """
     from repro.core import chunked_step as cs
     from repro.core.schedule_sim import rotation_windows
@@ -374,7 +408,8 @@ def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
         meta = cs._prefix_meta_write(meta, b, cfg, i * C)
         metas.append(meta)
 
-    kv_sharding = NamedSharding(mesh, P(axis, "data"))
+    kv_sharding = NamedSharding(
+        mesh, P(axis, "data", "seq") if cp > 1 else P(axis, "data"))
     kv = jax.device_put(
         {"k": jnp.zeros((cfg.num_layers, R, cap, cfg.padded_num_kv_heads,
                          hd), dtype),
@@ -385,7 +420,7 @@ def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
     stats.wave_sizes.append(n)
     stats.kv_capacity_slots.append(cap // C if C else 0)
 
-    f = _window_step_fn(cfg, mesh, S, blockwise_threshold, axis)
+    f = _window_step_fn(cfg, mesh, S, blockwise_threshold, axis, cp)
     scale = jnp.asarray(loss_scale, jnp.float32)
 
     def window_batch(g0, g1):
@@ -407,6 +442,7 @@ def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
 
     total_loss = 0.0
     kept_vjp = None
+    recompute0 = stats.recompute_calls
     for wi, (g0, g1) in enumerate(ranges):
         W = g1 - g0
         batch_w = window_batch(g0, g1)
@@ -452,13 +488,18 @@ def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
         stats.backward_calls += W
         stats.makespan_units += 2 * (W + S - 1)
         stats.scans.append(("B", W, W + S - 1))
+    if cp > 1:
+        rec = stats.recompute_calls - recompute0
+        stats.ring_steps += dp_balance.ring_hops(n + rec, n, cp,
+                                                 cfg.num_layers)
     return total_loss, grads
 
 
 def run_batch_pipelined(cfg: ModelConfig, params, groups, standalone,
                         mesh, *, k: int = 1, blockwise_threshold: int = 8192,
-                        plan_policy: str = "lpt", axis: str = "pipe"):
-    """One training micro-iteration on a 2D (data x pipe) mesh.
+                        plan_policy: str = "lpt", axis: str = "pipe",
+                        cp_threshold: int = 0):
+    """One training micro-iteration on a (data x pipe [x seq]) mesh.
 
     The dp_balance planner assigns dependent groups / packed standalone
     chunks to DP ranks (token-work LPT, largest-first stream order so big
@@ -468,6 +509,12 @@ def run_batch_pipelined(cfg: ModelConfig, params, groups, standalone,
     ``data``; the rotation pipelines them over ``pipe`` with the K-retention
     schedule. Numerically equivalent to the single-device ``run_batch``
     (tests/test_pipeline2d.py: <=1e-5, including K < N recompute).
+
+    With a "seq" axis, ring-eligible waves (see `dp_balance.cp_eligible` and
+    ``cp_threshold``) additionally shard chunk tokens and the per-stage
+    StateStore capacity over "seq" — context parallelism composed INSIDE the
+    rotation's shard_map. Waves whose per-rank StateStore shard would split
+    a chunk slot (cap/cp not a multiple of C) fall back to seq-replication.
     """
     if cfg.family != "dense":
         raise NotImplementedError(
@@ -478,11 +525,14 @@ def run_batch_pipelined(cfg: ModelConfig, params, groups, standalone,
         raise ValueError(f"num_layers={cfg.num_layers} not divisible by "
                          f"pipe={S}")
     from repro.core import chunked_step as cs
+    from repro.distributed.context_parallel import ring_wave
 
     R = sharding.dp_size(mesh)
+    cp = sharding.seq_size(mesh)
     scale = cs._batch_loss_scale(groups, standalone)
-    units = dp_balance.units_from_materialized(groups, standalone, k=k,
-                                               static_shapes=True)
+    units = dp_balance.units_from_materialized(
+        groups, standalone, k=k, static_shapes=True, cp=cp,
+        cp_threshold=cp_threshold)
     plan = dp_balance.plan_assignment(units, R, policy=plan_policy)
     waves, _ = dp_balance.wave_schedule(plan)
 
@@ -491,9 +541,15 @@ def run_batch_pipelined(cfg: ModelConfig, params, groups, standalone,
     stats = PipelineStats(n_stages=S)
     for wave in waves:
         slots = cs.stack_wave_slots(cfg, wave, mesh)
+        n = len(slots)
+        C = slots[0]["tokens"].shape[1]
+        cap = ss.prefix_capacity(n, C)
+        ring = (cp > 1 and ring_wave(wave) and C % cp == 0
+                and (cap == 0 or (cap // cp) % C == 0))
         l, grads = _run_wave_pipelined(
             cfg, params, slots, k=k, mesh=mesh, n_stages=S,
             loss_scale=scale, grads=grads, stats=stats,
-            blockwise_threshold=blockwise_threshold, axis=axis)
+            blockwise_threshold=blockwise_threshold, axis=axis,
+            cp=(cp if ring else 1))
         total_loss = total_loss + l
     return total_loss, grads, stats

@@ -169,6 +169,20 @@ def pipe_size(mesh) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get("pipe", 1)
 
 
+def seq_size(mesh) -> int:
+    """Size of the context-parallel ("seq") axis (1 when the mesh has none).
+
+    CP placement contract: params and optimizer state replicate over "seq"
+    (every CP rank applies the full layer stack to its token shard); batch
+    token dims shard over "seq" (`batch_specs`); StateStore K/V buffers shard
+    their capacity dim over "seq" — each rank holds the contiguous
+    [i*cap/cp, (i+1)*cap/cp) ring shard that circulates via ppermute inside
+    the CP executors."""
+    if mesh is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("seq", 1)
+
+
 def pipeline_param_specs(tree, mesh):
     """Stage-sharded placement for the 2D (data x pipe) training mesh.
 
@@ -225,7 +239,12 @@ def dp_put(cfg: ModelConfig, batch, mesh):
 
 
 def batch_specs(cfg: ModelConfig, batch_shape, mesh):
+    """Batch dims over DP; with a context-parallel "seq" axis the token dim
+    (dim 1 of every (B, C[, ...]) chunk array) additionally shards over it,
+    matching the CP executors' shard_map in_specs so dp_put lands the data
+    where the ring will read it."""
     dp = dp_axes(mesh)
+    cp = seq_size(mesh)
 
     def leaf(path, x):
         name = getattr(path[-1], "key", None)
@@ -237,7 +256,10 @@ def batch_specs(cfg: ModelConfig, batch_shape, mesh):
         total_dp = int(np.prod([dict(zip(mesh.axis_names,
                                          mesh.devices.shape))[a] for a in dp]))
         first = dp if _div(bsz, total_dp) else None
-        return P(first, *([None] * (x.ndim - 1)))
+        rest = [None] * (x.ndim - 1)
+        if cp > 1 and x.ndim >= 2 and _div(x.shape[1], cp):
+            rest[0] = "seq"
+        return P(first, *rest)
 
     return jax.tree_util.tree_map_with_path(leaf, batch_shape)
 

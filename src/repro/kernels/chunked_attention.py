@@ -30,6 +30,13 @@ sliding window. The window rides as a *dynamic* SMEM scalar so per-layer
 local/global alternation (a traced window under ``lax.scan``) hits one
 compiled kernel; ``window <= 0`` disables it and BIG_WINDOW-style sentinels
 are no-ops.
+
+``ring_chunked_prefix_attention`` is the context-parallel sibling: the same
+fwd/bwd kernels run per ring hop inside a ``shard_map`` over the "seq" mesh
+axis while K/V (with its pos/seg metadata) circulates via ``lax.ppermute``;
+partials merge through the LSE residual, and the backward exploits the flash
+decomposition (per-hop dq/dk/dv depend only on the global LSE and delta) so
+the Pallas kernels are reused unchanged.
 """
 from __future__ import annotations
 
@@ -333,6 +340,102 @@ def _attention_fn(softcap: float, block_q: int, block_k: int,
 
     attn.defvjp(fwd, bwd)
     return attn
+
+
+# ========================================================= ring (CP) path ===
+def _merge_partials(o_a, lse_a, o_b, lse_b):
+    """Online-softmax merge of two *normalized* flash partials (f32).
+
+    Each partial is attention over a disjoint K/V subset with its own
+    log-sum-exp; the merged pair is exactly attention over the union. Fully
+    masked partials carry the LSE sentinel (~NEG_INF) and zero output, so
+    their merge weight underflows to 0 and they drop out."""
+    lse = jnp.logaddexp(lse_a, lse_b)
+    w_a = jnp.exp(lse_a - lse)[..., None]
+    w_b = jnp.exp(lse_b - lse)[..., None]
+    return o_a * w_a + o_b * w_b, lse
+
+
+@functools.lru_cache(maxsize=None)
+def _ring_attention_fn(axis_name: str, cp: int, softcap: float, block_q: int,
+                       block_k: int, interpret: bool):
+    """Ring flash attention over a ``shard_map`` axis of size ``cp``.
+
+    Called with this rank's Q shard and K/V *ring shard*; the K/V (with its
+    pos/seg metadata) circulates via ``lax.ppermute`` while Q stays resident.
+    Forward: per-hop ``_flash_fwd`` partials merged with the LSE residual.
+    Backward: the standard flash decomposition — dq/dk/dv for every
+    (q-shard, kv-shard) pair depend only on the *global* LSE and
+    delta = rowsum(do * o), so each hop reuses the existing ``_flash_bwd``
+    Pallas kernels unchanged; the dk/dv accumulator travels WITH its kv
+    shard around the ring and a final hop returns it to the owner."""
+    kw = dict(softcap=softcap, block_q=block_q, block_k=block_k,
+              interpret=interpret)
+    perm = [(i, (i + 1) % cp) for i in range(cp)]
+
+    def rotate(*xs):
+        return tuple(jax.lax.ppermute(x, axis_name, perm) for x in xs)
+
+    def ring_fwd(q, k, v, q_pos, k_pos, q_seg, k_seg, w):
+        kc, vc, pc, sc = k, v, k_pos, k_seg
+        o = lse = None
+        for step in range(cp):
+            o_h, lse_h = _flash_fwd(q, kc, vc, q_pos, pc, q_seg, sc, w, **kw)
+            o_h = o_h.astype(jnp.float32)
+            o, lse = ((o_h, lse_h) if o is None
+                      else _merge_partials(o, lse, o_h, lse_h))
+            if step < cp - 1:
+                kc, vc, pc, sc = rotate(kc, vc, pc, sc)
+        return o.astype(q.dtype), lse
+
+    @jax.custom_vjp
+    def attn(q, k, v, q_pos, k_pos, q_seg, k_seg, w):
+        return ring_fwd(q, k, v, q_pos, k_pos, q_seg, k_seg, w)[0]
+
+    def fwd(q, k, v, q_pos, k_pos, q_seg, k_seg, w):
+        o, lse = ring_fwd(q, k, v, q_pos, k_pos, q_seg, k_seg, w)
+        return o, (q, k, v, q_pos, k_pos, q_seg, k_seg, w, o, lse)
+
+    def bwd(res, do):
+        q, k, v, q_pos, k_pos, q_seg, k_seg, w, o, lse = res
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                        axis=-1)
+        kc, vc, pc, sc = k, v, k_pos, k_seg
+        dq = jnp.zeros(q.shape, jnp.float32)
+        dk = jnp.zeros(k.shape, jnp.float32)
+        dv = jnp.zeros(v.shape, jnp.float32)
+        for step in range(cp):
+            dq_h, dk_h, dv_h = _flash_bwd(q, kc, vc, q_pos, pc, q_seg, sc, w,
+                                          do, lse, delta, **kw)
+            dq += dq_h.astype(jnp.float32)
+            dk += dk_h.astype(jnp.float32)
+            dv += dv_h.astype(jnp.float32)
+            if step < cp - 1:
+                kc, vc, pc, sc = rotate(kc, vc, pc, sc)
+                dk, dv = rotate(dk, dv)
+        dk, dv = rotate(dk, dv)      # return each accumulator to its owner
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                None, None, None, None, None)
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def ring_chunked_prefix_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
+                                  axis_name: str, cp: int, window=0,
+                                  softcap: float = 0.0, block_q: int = 128,
+                                  block_k: int = 128,
+                                  interpret: bool = False):
+    """Context-parallel chunked attention. MUST be called inside a
+    ``shard_map`` over ``axis_name`` (size ``cp``): q is this rank's query
+    shard (B, Hq, T/cp, D), k/v this rank's K/V ring shard (B, Hkv, S/cp, D)
+    with matching k_pos/k_seg. Same mask contract and trainability as
+    ``chunked_prefix_attention``; numerically equal to running the
+    single-device kernel on the gathered shards (~1e-6, f32 merge order)."""
+    w = jnp.asarray(0 if window is None else window, jnp.int32).reshape(1)
+    fn = _ring_attention_fn(str(axis_name), int(cp), float(softcap),
+                            int(block_q), int(block_k), bool(interpret))
+    return fn(q, k, v, q_pos, k_pos, q_seg, k_seg, w)
 
 
 def chunked_prefix_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *,

@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.chunked_attention import chunked_prefix_attention
+from repro.kernels.chunked_attention import (chunked_prefix_attention,
+                                             ring_chunked_prefix_attention)
 from repro.kernels.decode_attention import decode_attention
 
 
@@ -61,6 +62,32 @@ def chunk_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *, window=None,
         _pad_to(q_seg, 1, block_q), _pad_to(k_seg, 1, block_k), w,
         softcap=float(softcap), block_q=block_q, block_k=block_k,
         interpret=interpret)
+    return o[:, :, :T].transpose(0, 2, 1, 3)
+
+
+def ring_chunk_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *, axis_name,
+                         cp, window=None, softcap=0.0, block_q=128,
+                         block_k=128, interpret=True):
+    """Context-parallel chunk attention — the ``shard_map`` sibling of
+    ``chunk_attention``. q: (B, T_loc, Hq, D) is this rank's query shard;
+    k/v: (B, S_loc, Hkv, D) this rank's K/V ring shard (its slice of
+    prefix ++ own, already rope-rotated), which circulates over ``axis_name``
+    via ppermute. Not jitted here: the caller's chunk fn owns the jit (we
+    are inside its shard_map region). Pad slots get seg=0 — every rank pads
+    identically, so the ring stays shape-uniform."""
+    B, T, Hq, D = q.shape
+    S = k.shape[1]
+    block_q = min(block_q, T)
+    block_k = min(block_k, S)
+    qt = _pad_to(q.transpose(0, 2, 1, 3), 2, block_q)
+    kt = _pad_to(k.transpose(0, 2, 1, 3), 2, block_k)
+    vt = _pad_to(v.transpose(0, 2, 1, 3), 2, block_k)
+    o = ring_chunked_prefix_attention(
+        qt, kt, vt,
+        _pad_to(q_pos, 1, block_q), _pad_to(k_pos, 1, block_k),
+        _pad_to(q_seg, 1, block_q), _pad_to(k_seg, 1, block_k),
+        axis_name=axis_name, cp=cp, window=window, softcap=float(softcap),
+        block_q=block_q, block_k=block_k, interpret=interpret)
     return o[:, :, :T].transpose(0, 2, 1, 3)
 
 

@@ -27,12 +27,20 @@ def make_pipeline_mesh(n_stages: int = 4, data: int = 1):
     return jax.make_mesh((n_stages,), ("pipe",))
 
 
-def make_train_mesh(data: int = 1, pipe: int = 1):
-    """2D (data x pipe) mesh for the K-retention pipeline trainer
-    (distributed/pipeline.run_batch_pipelined, train.py --dp/--pp). Needs
-    data*pipe visible devices; on CPU force them with
-    XLA_FLAGS=--xla_force_host_platform_device_count=N. With pipe == 1 this
-    degrades to the pure-DP mesh (axis still named "data")."""
+def make_train_mesh(data: int = 1, pipe: int = 1, seq: int = 1):
+    """Up-to-3D (data x pipe x seq) mesh for the ChunkFlow trainers
+    (train.py --dp/--pp/--cp). Needs data*pipe*seq visible devices; on CPU
+    force them with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+
+    "seq" is the context-parallel axis: a chunk's tokens are sharded over it
+    and its K/V circulates as a ppermute ring
+    (distributed/context_parallel.py), so "seq" sits minor — ring neighbors
+    land on adjacent devices. Degenerate axes are dropped: pipe == seq == 1
+    gives the pure-DP mesh (axis still named "data")."""
+    if seq > 1:
+        if pipe > 1:
+            return jax.make_mesh((data, pipe, seq), ("data", "pipe", "seq"))
+        return jax.make_mesh((data, seq), ("data", "seq"))
     if pipe <= 1:
         return make_data_mesh(data)
     return jax.make_mesh((data, pipe), ("data", "pipe"))

@@ -23,6 +23,10 @@ CPU-scale entry points (the multi-pod path is exercised by launch/dryrun.py):
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
         --steps 5 --chunk-size 256 --retain-k 2 --reduced --dp 2 --pp 2
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+        --steps 5 --chunk-size 256 --reduced --dp 2 --pp 2 --cp 2
 """
 from __future__ import annotations
 
@@ -43,7 +47,7 @@ from repro.distributed import sharding
 from repro.launch import mesh as mesh_lib
 from repro.models import api
 from repro.optim import adamw
-from repro.checkpoint.io import save_checkpoint
+from repro.checkpoint.io import restore_checkpoint, save_checkpoint
 
 
 def build_host_batches(seqs, lengths, chunk_size):
@@ -65,20 +69,35 @@ def _to_device(gb, sb):
 def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
           max_len: int = 2048, log_every: int = 1, checkpoint_path=None,
           sampler=None, mesh=None, prefetch_depth: int = 2,
-          plan_policy: str = "lpt"):
+          plan_policy: str = "lpt", cp_threshold: int = 0,
+          resume_path=None):
     params = api.init_params(cfg, jax.random.PRNGKey(tc.seed),
                              max_seq=max_len + 8)
     opt_state = adamw.adamw_init(params)
     sampler = sampler or LongTailSampler(PAPER_EVAL_CDF, min_len=32,
                                          seed=tc.seed, max_len=max_len)
+    start_step = 0
+    if resume_path:
+        # restore BEFORE mesh placement: the pipeline_put/replicate_put
+        # below then shards the restored state exactly like a fresh run
+        restored, start_step = restore_checkpoint(
+            resume_path, {"params": params, "opt": opt_state})
+        params, opt_state = restored["params"], restored["opt"]
+        # replay the sampler past the consumed steps so the resumed stream
+        # continues where the interrupted run left off (save->resume->step
+        # is bit-compatible with the uninterrupted run)
+        for _ in range(start_step):
+            sampler.sample_batch(batch_per_step, cfg.vocab_size)
+        print(f"resumed step {start_step} <- {resume_path}")
     dp = sharding.dp_size(mesh) if mesh is not None else 1
     pp = sharding.pipe_size(mesh)
+    cp = sharding.seq_size(mesh)
     if pp > 1:
         # stage-sharded layer slabs over "pipe", everything else replicated;
         # adamw m/v are param-shaped so they inherit the same placement
         params = sharding.pipeline_put(mesh, params)
         opt_state = sharding.pipeline_put(mesh, opt_state)
-    elif dp > 1:
+    elif dp > 1 or cp > 1:
         # keep train state resident on the mesh (replicated) across steps so
         # run_batch/apply_update never re-transfer it
         params = sharding.replicate_put(mesh, params)
@@ -97,22 +116,24 @@ def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
         seqs, lengths = sampler.sample_batch(batch_per_step, cfg.vocab_size)
         return build_host_batches(seqs, lengths, tc.chunk_size)
 
-    stream = (Prefetcher(produce, tc.total_steps, depth=prefetch_depth)
-              if prefetch_depth > 0 else synchronous(produce, tc.total_steps))
+    n_steps = tc.total_steps - start_step
+    stream = (Prefetcher(produce, n_steps, depth=prefetch_depth)
+              if prefetch_depth > 0 else synchronous(produce, n_steps))
 
     history = []
     try:
-        for step, (gb_h, sb_h, chunks) in enumerate(stream):
+        for off, (gb_h, sb_h, chunks) in enumerate(stream):
+            step = start_step + off
             t0 = time.time()
             # DP path consumes host batches directly: the planner reads token
             # counts without device round-trips, and dp_put transfers each
             # stacked wave slot straight to its sharded layout (no staging
             # copy on the default device)
-            gb, sb = (gb_h, sb_h) if (dp > 1 or pp > 1) \
+            gb, sb = (gb_h, sb_h) if (dp > 1 or pp > 1 or cp > 1) \
                 else _to_device(gb_h, sb_h)
             loss, grads, stats = chunked_step.run_batch(
                 cfg, params, gb, sb, k=tc.k_chunks, mesh=mesh,
-                plan_policy=plan_policy)
+                plan_policy=plan_policy, cp_threshold=cp_threshold)
             lr = adamw.cosine_schedule(step, base_lr=tc.learning_rate,
                                        warmup_steps=tc.warmup_steps,
                                        total_steps=tc.total_steps)
@@ -127,6 +148,8 @@ def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
             })
             if pp > 1:
                 history[-1]["bubble_ratio"] = stats.bubble_ratio
+            if cp > 1:
+                history[-1]["ring_steps"] = stats.ring_steps
             if step % log_every == 0:
                 h = history[-1]
                 print(f"step {step:4d} loss {h['loss']:.4f}"
@@ -135,7 +158,9 @@ def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
                       f" recompute {h['recomputes']} {dt:.2f}s"
                       + (f" dp {dp}" if dp > 1 else "")
                       + (f" pp {pp} bubble {stats.bubble_ratio:.0%}"
-                         if pp > 1 else ""))
+                         if pp > 1 else "")
+                      + (f" cp {cp} ring {stats.ring_steps}"
+                         if cp > 1 else ""))
     finally:
         if hasattr(stream, "close"):
             stream.close()
@@ -170,6 +195,20 @@ def main(argv=None):
                     help="pipeline stages; composes with --dp on a 2D "
                          "(data x pipe) mesh of dp*pp devices (num_layers "
                          "must divide by pp)")
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context-parallel degree: chunk tokens shard over "
+                         "a \"seq\" mesh axis and K/V circulates as a "
+                         "ppermute ring (removes the one-device ChunkSize "
+                         "cap); composes with --dp/--pp on a dp*pp*cp-device "
+                         "mesh (chunk-size must divide by cp)")
+    ap.add_argument("--cp-threshold", type=int, default=0,
+                    help="minimum unit token span (chunks * ChunkSize) that "
+                         "rides the CP ring; shorter units replicate over "
+                         "\"seq\" instead of paying ring latency (0 = all)")
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint path to restore params/opt state/step "
+                         "from; continues an interrupted run (the data "
+                         "stream is replayed to the restored step)")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="host-side prefetch depth (0 = synchronous)")
     ap.add_argument("--plan", default="lpt",
@@ -182,15 +221,19 @@ def main(argv=None):
         cfg = cfg.reduced()
     tc = TrainConfig(chunk_size=args.chunk_size, k_chunks=args.k,
                      learning_rate=args.lr, total_steps=args.steps)
-    if args.pp > 1:
-        mesh = mesh_lib.make_train_mesh(args.dp, args.pp)
+    if args.cp > 1 and args.chunk_size % args.cp:
+        raise SystemExit(f"--chunk-size {args.chunk_size} must divide by "
+                         f"--cp {args.cp}")
+    if args.pp > 1 or args.cp > 1:
+        mesh = mesh_lib.make_train_mesh(args.dp, args.pp, args.cp)
     elif args.dp > 1:
         mesh = mesh_lib.make_data_mesh(args.dp)
     else:
         mesh = None
     train(cfg, tc, batch_per_step=args.batch, max_len=args.max_len,
           checkpoint_path=args.checkpoint, mesh=mesh,
-          prefetch_depth=args.prefetch, plan_policy=args.plan)
+          prefetch_depth=args.prefetch, plan_policy=args.plan,
+          cp_threshold=args.cp_threshold, resume_path=args.resume)
 
 
 if __name__ == "__main__":

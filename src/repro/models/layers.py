@@ -251,7 +251,7 @@ def init_attention(key, cfg: ModelConfig, dtype):
 
 def attention_layer(p, x, cfg: ModelConfig, *, positions, segment_ids,
                     prefix=None, window=None, blockwise_threshold=8192,
-                    cross_kv=None):
+                    cross_kv=None, cp_axis=None, cp=1):
     """Returns (out, new_kv) where new_kv = {"k","v"} of THIS chunk (for the
     ChunkFlow state store).
 
@@ -259,6 +259,11 @@ def attention_layer(p, x, cfg: ModelConfig, *, positions, segment_ids,
     this chunk's K/V (the paper's StateStore read path).
     cross_kv: optional {"k","v","seg"} for encoder-decoder cross attention
     (used instead of self-attention K/V; no causal mask).
+    cp_axis/cp: context parallelism — set inside a ``shard_map`` over a
+    mesh axis of size ``cp`` where x/positions/segment_ids hold this rank's
+    token shard and ``prefix`` this rank's slice of the (seq-sharded)
+    StateStore. Attention then runs as a ppermute ring over ``cp_axis``
+    (kernels.ops.ring_chunk_attention) and new_kv is the local shard.
     """
     B, T, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -305,11 +310,19 @@ def attention_layer(p, x, cfg: ModelConfig, *, positions, segment_ids,
     else:
         k_all, v_all, k_pos, k_seg = k, v, pos1d, segment_ids
 
-    # Backend ladder: pallas flash kernel (trainable custom_vjp; window rides
-    # as a dynamic scalar so local/global alternation shares one compile) ->
-    # dense sdpa for short sequences -> blockwise online-softmax for long.
+    # Backend ladder: CP ring (inside shard_map) -> pallas flash kernel
+    # (trainable custom_vjp; window rides as a dynamic scalar so local/global
+    # alternation shares one compile) -> dense sdpa for short sequences ->
+    # blockwise online-softmax for long.
     Tk = k_all.shape[1]
-    if cfg.attn_backend in ("pallas", "pallas_interpret"):
+    if cp_axis is not None and cp > 1:
+        from repro.kernels import ops
+        out = ops.ring_chunk_attention(
+            q, k_all, v_all, pos1d, k_pos, segment_ids, k_seg,
+            axis_name=cp_axis, cp=cp, window=window,
+            softcap=cfg.attn_softcap,
+            interpret=(cfg.attn_backend != "pallas"))
+    elif cfg.attn_backend in ("pallas", "pallas_interpret"):
         from repro.kernels import ops
         out = ops.chunk_attention(
             q, k_all, v_all, pos1d, k_pos, segment_ids, k_seg,

@@ -1,0 +1,169 @@
+"""Context-parallel ("seq" axis) ring attention executor: numerical
+equivalence to the single-device ChunkFlow scheduler across the full mask
+contract (prefix 0/C/3C, packed segments, sliding window + softcap, GQA),
+cp_threshold ring gating, and the 3D dp x pipe x seq composition.
+
+Subprocess tests because XLA_FLAGS must be set before jax initializes (and
+the rest of the suite must keep seeing 1 device), like test_pipeline2d.py.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+_PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import chunking, chunked_step
+from repro.models import api
+from repro.launch import mesh as mesh_lib
+
+# GQA (4 query / 2 kv heads) is the base; the "gemma2" variant adds
+# attention softcap + sliding-window local/global alternation.
+BASE = dict(family="dense", num_layers=2, d_model=32, num_heads=4,
+            num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=61,
+            dtype="float32", rope_theta=10_000.0,
+            attn_backend="pallas_interpret")
+CFGS = {
+    "gqa": ModelConfig(name="cp-gqa", **BASE),
+    "gemma2": ModelConfig(name="cp-gemma2", attn_softcap=30.0,
+                          sliding_window=24, local_global_alternate=True,
+                          **BASE),
+}
+C = 16
+
+
+def make_batch(cfg, lengths, seed=0):
+    rng = np.random.RandomState(seed)
+    seqs = {i: rng.randint(1, cfg.vocab_size, size=l).astype(np.int32)
+            for i, l in lengths.items()}
+    chunks = chunking.construct_chunks(lengths, C)
+    groups, standalone = chunking.group_chunks(chunks)
+    gb = [[chunking.materialize_chunk(c, seqs) for c in g]
+          for g in groups.values()]
+    sb = [chunking.materialize_chunk(c, seqs) for c in standalone]
+    return gb, sb
+
+
+def single_device_ref(cfg, params, gb, sb, k):
+    gb_d = [[{k2: jnp.asarray(v) for k2, v in b.items()} for b in g]
+            for g in gb]
+    sb_d = [{k2: jnp.asarray(v) for k2, v in b.items()} for b in sb]
+    return chunked_step.run_batch(cfg, params, gb_d, sb_d, k=k)
+
+
+def check(tag, got, want):
+    loss, grads, stats = got
+    ref_loss, ref_grads, _ = want
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5,
+                               err_msg=str(tag))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6,
+            err_msg=str(tag)),
+        grads, ref_grads)
+    return stats
+"""
+
+EQUIVALENCE = (_PRELUDE % 4) + r"""
+# prefix coverage: a 4-chunk group exercises StateStore prefixes C..3C
+# (capacity 4C); standalone packed chunks exercise prefix 0 + segment
+# masking; a 2-chunk group exercises the smallest capacity bucket.
+LENGTHS = {0: 4 * C - 3, 1: 2 * C, 2: 9, 3: 5, 4: 12, 5: 7}
+
+for name, cfg in CFGS.items():
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    gb, sb = make_batch(cfg, LENGTHS)
+    ref = single_device_ref(cfg, params, gb, sb, 1)
+    for cp in (2, 4):
+        mesh = mesh_lib.make_train_mesh(1, 1, cp)
+        got = chunked_step.run_batch(cfg, params, gb, sb, k=1, mesh=mesh)
+        stats = check((name, cp), got, ref)
+        assert stats.ring_steps > 0, (name, cp)
+
+# K < N recompute on the ring + dp x cp composition
+cfg = CFGS["gqa"]
+params = api.init_params(cfg, jax.random.PRNGKey(1))
+gb, sb = make_batch(cfg, {0: 5 * C - 3, 1: 3 * C, 2: 9, 3: 30})
+for k in (1, 2):
+    ref = single_device_ref(cfg, params, gb, sb, k)
+    got = chunked_step.run_batch(cfg, params, gb, sb, k=k,
+                                 mesh=mesh_lib.make_train_mesh(1, 1, 2))
+    stats = check(("recompute", k), got, ref)
+    if k == 1:
+        assert stats.recompute_calls > 0
+    got = chunked_step.run_batch(cfg, params, gb, sb, k=k,
+                                 mesh=mesh_lib.make_train_mesh(2, 1, 2))
+    check(("dp2cp2", k), got, ref)
+
+# cp_threshold: long-tail units ride the ring, short ones replicate; both
+# regimes (and the all-off extreme) stay numerically equivalent
+mesh = mesh_lib.make_train_mesh(1, 1, 2)
+ref = single_device_ref(cfg, params, gb, sb, 1)
+got = chunked_step.run_batch(cfg, params, gb, sb, k=1, mesh=mesh,
+                             cp_threshold=3 * C)
+stats = check(("threshold",), got, ref)
+assert stats.ring_steps > 0
+got = chunked_step.run_batch(cfg, params, gb, sb, k=1, mesh=mesh,
+                             cp_threshold=1 << 30)
+stats = check(("threshold-off",), got, ref)
+assert stats.ring_steps == 0
+
+# ring-hop accounting matches the analytic count
+from repro.core.dp_balance import ring_step_count
+gb1, sb1 = make_batch(cfg, {0: 4 * C})        # one 4-chunk group, nothing else
+ref = single_device_ref(cfg, params, gb1, sb1, 2)
+got = chunked_step.run_batch(cfg, params, gb1, sb1, k=2, mesh=mesh)
+stats = check(("hops",), got, ref)
+assert stats.ring_steps == ring_step_count(4, 2, k=2,
+                                           n_layers=cfg.num_layers)
+print("CP-EQUIVALENCE-OK")
+"""
+
+COMPOSITION = (_PRELUDE % 8) + r"""
+# full 3D mesh: dp=2 x pp=2 x cp=2 (8 devices) vs single device, incl.
+# K < N recompute and a mixed-length stream with standalone chunks
+cfg = ModelConfig(name="cp-3d", **dict(BASE, num_layers=4))
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+gb, sb = make_batch(cfg, {0: 4 * C - 3, 1: 2 * C, 2: 9, 3: 5, 4: 12})
+mesh = mesh_lib.make_train_mesh(2, 2, 2)
+for k in (1, 2):
+    ref = single_device_ref(cfg, params, gb, sb, k)
+    got = chunked_step.run_batch(cfg, params, gb, sb, k=k, mesh=mesh)
+    stats = check(("3d", k), got, ref)
+    assert stats.ring_steps > 0, k
+
+# end-to-end train.py flag composition (--dp 2 --pp 2 --cp 2): one step
+# must run and log a finite loss
+from repro.launch import train as train_mod
+train_mod.main(["--arch", "granite-3-8b", "--reduced", "--steps", "1",
+                "--chunk-size", str(C), "--max-len", "48", "--batch", "4",
+                "--dp", "2", "--pp", "2", "--cp", "2", "--prefetch", "0"])
+print("CP-COMPOSITION-OK")
+"""
+
+
+def _run(script):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True,
+                          cwd=os.path.dirname(
+                              os.path.dirname(os.path.abspath(__file__))))
+
+
+def test_cp_matches_single_device():
+    r = _run(EQUIVALENCE)
+    assert "CP-EQUIVALENCE-OK" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+def test_cp_composes_with_dp_and_pp():
+    r = _run(COMPOSITION)
+    assert "CP-COMPOSITION-OK" in r.stdout, r.stdout + "\n" + r.stderr

@@ -46,6 +46,42 @@ def test_unit_work_counts_recompute():
     assert dp_balance.unit_work(w, k=4) == pytest.approx(12.0)
 
 
+def test_cp_cost_model():
+    """A ring-eligible unit acts as one logical rank at 1/cp cost; units
+    under cp_threshold keep full cost (they replicate over "seq")."""
+    lengths = {0: 8 * 1024, 1: 5 * 1024 - 7, 2: 3 * 1024, 3: 2 * 1024 - 1,
+               4: 900, 5: 500, 6: 80}
+    groups, standalone = group_chunks(construct_chunks(lengths, 1024))
+    base = dp_balance.units_from_chunks(groups, standalone, k=2)
+    cp4 = dp_balance.units_from_chunks(groups, standalone, k=2, cp=4)
+    assert all(u.ring for u in cp4)
+    for u0, u4 in zip(base, cp4):
+        assert u4.work == pytest.approx(u0.work / 4)
+    # threshold: only units spanning >= 4 chunks ride the ring
+    thr = dp_balance.units_from_chunks(groups, standalone, k=2, cp=4,
+                                       cp_threshold=4 * 1024)
+    assert any(u.ring for u in thr) and any(not u.ring for u in thr)
+    for u0, ut in zip(base, thr):
+        want = u0.work / 4 if u0.n_chunks >= 4 else u0.work
+        assert ut.work == pytest.approx(want)
+        assert ut.ring == (u0.n_chunks >= 4)
+    # materialized-batch units agree with chunk units on the cp adjustment
+    assert dp_balance.cp_eligible(4, 1024, 4, 4096)
+    assert not dp_balance.cp_eligible(3, 1024, 4, 4096)
+    assert not dp_balance.cp_eligible(8, 1024, 1, 0)       # cp=1: never
+
+
+def test_ring_step_count():
+    """cp-1 K/V rotation hops per forward (incl. recompute forwards), cp per
+    backward (the dk/dv accumulator takes one extra hop home)."""
+    assert dp_balance.ring_step_count(1, 4) == (4 - 1) + 4
+    # 4 chunks, k=1 -> 3 recomputes: hops = (cp-1)*(4+3) + cp*4
+    assert dp_balance.ring_step_count(4, 2, k=1) == 1 * 7 + 2 * 4
+    assert dp_balance.ring_step_count(4, 2, k=4) == 1 * 4 + 2 * 4
+    assert dp_balance.ring_step_count(4, 2, k=4, n_layers=3) == 3 * 12
+    assert dp_balance.ring_step_count(4, 1) == 0
+
+
 # --------------------------------------------------------------- planner ----
 @pytest.mark.parametrize("world_size", [1, 2, 4, 8])
 @pytest.mark.parametrize("policy", ["lpt", "round_robin"])

@@ -1,7 +1,14 @@
-"""Paper §5 grid search behaviour."""
+"""Paper §5 grid search behaviour — and the tuner/executor agreement fix:
+PP candidates are scored with the rotation schedule the PR-4 executor runs
+(`simulate_rotation`), not Megatron-style `simulate_1f1b`."""
+import dataclasses
+
 import numpy as np
 
-from repro.core.tuning import grid_search
+from repro.core.chunking import construct_chunks
+from repro.core.schedule_sim import (chunks_to_microbatches, simulate_1f1b,
+                                     simulate_rotation)
+from repro.core.tuning import grid_search, rotation_wave_sizes, seq_time
 from repro.data.synthetic import LongTailSampler, PAPER_EVAL_CDF
 
 
@@ -39,3 +46,57 @@ def test_scores_deterministic():
     r1 = grid_search(b, pp=4, memory_token_budget=16_384)
     r2 = grid_search(b, pp=4, memory_token_budget=16_384)
     assert r1.table == r2.table
+
+
+def test_pp_scores_pinned_to_rotation_sim():
+    """grid_search(pp>1) scores are exactly simulate_rotation makespans —
+    the closed form the executor reports in PipelineStats.makespan_units —
+    at unit = seq_time(ChunkSize), for every grid candidate."""
+    batches = _batches(n=2, batch=32)
+    pp = 4
+    r = grid_search(batches, pp=pp, memory_token_budget=32_768)
+    for (cs, k), score in r.table.items():
+        want = sum(
+            simulate_rotation(rotation_wave_sizes(construct_chunks(ls, cs)),
+                              pp, k, unit=seq_time(cs)).makespan
+            for ls in batches) / len(batches)
+        assert score == want, (cs, k, score, want)
+
+
+def _score_1f1b(batches, pp, budget, chunk_sizes, ks):
+    """The pre-fix scorer (1F1B with variable-duration microbatches)."""
+    table = {}
+    for cs in chunk_sizes:
+        for k in ks:
+            if k * cs > budget:
+                continue
+            total = 0.0
+            for lengths in batches:
+                mbs = chunks_to_microbatches(construct_chunks(lengths, cs),
+                                             k=k)
+                mbs = [dataclasses.replace(m, fwd=seq_time(m.fwd))
+                       for m in mbs]
+                total += simulate_1f1b(mbs, pp, state_aware=True).makespan
+            table[(cs, k)] = total / len(batches)
+    return table
+
+
+def test_1f1b_scoring_ranking_bug_fixed():
+    """The old 1F1B scorer ranks candidates differently from the rotation
+    schedule the executor actually runs (short chunks cost less than a tick
+    under 1F1B; the rotation executes every capacity-padded slot as one
+    uniform tick). On the paper's own length distribution the two scorers
+    disagree on the best ChunkSize — grid_search must return the rotation
+    argmin, not the 1F1B one."""
+    batches = _batches(n=4, batch=64)
+    grid = dict(chunk_sizes=(2048, 4096, 8192, 16384, 32768),
+                ks=(1, 2, 4, 8, 16))
+    r = grid_search(batches, pp=4, memory_token_budget=32_768, **grid)
+    old = _score_1f1b(batches, 4, 32_768, **grid)
+    old_best = min(old, key=old.get)
+    new_best = min(r.table, key=r.table.get)
+    assert old_best != new_best, \
+        "scorers agree on this grid; the regression case is gone"
+    assert (r.chunk_size, r.k) == new_best
+    # and the 1F1B pick is measurably worse in executor (rotation) units
+    assert r.table[old_best] > r.score
