@@ -37,6 +37,8 @@ GATED = {
     "BENCH_serving.json": [],          # latency/throughput: report-only
     "BENCH_cp.json": ["gate.*"],       # ring steps / balance / K/V bytes:
                                        # deterministic planner+geometry math
+    "BENCH_planner.json": ["gate.*"],  # solved-vs-fixed makespans + ratio:
+                                       # deterministic schedule_sim math
 }
 
 REPORT_ONLY_SUFFIXES = ("_us", "_s")

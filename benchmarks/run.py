@@ -127,6 +127,9 @@ SECTIONS = [
     ("cp", "Context parallelism: ring-step counts, cp_threshold balance, "
      "per-device K/V bytes vs cp (deterministic planner/geometry math)",
      "benchmarks.context_parallel", "run", {}, True),
+    ("planner", "Heterogeneous planner: solved per-wave cp vs best fixed "
+     "(cp, C, K) config at world 8 (deterministic schedule_sim math)",
+     "benchmarks.planner", "run", {}, True),
     ("micro", "Microbenchmarks", "benchmarks.run", _run_micro, {}, True),
     ("roofline", "Roofline (from dryrun_results.jsonl if present)",
      "benchmarks.roofline", "run", {}, False),

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -24,8 +25,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import dp_balance
+from repro.core import dp_balance, planner
 from repro.core import statestore as ss
+from repro.core.planner import ExecutionPlan
 from repro.distributed import sharding
 from repro.models import api
 
@@ -51,6 +53,9 @@ class SchedulerStats:
     backward_calls: int = 0
     max_live_residuals: int = 0
     ring_steps: int = 0       # context-parallel ppermute hops (0 without CP)
+    # per-wave cp actually executed ([] on the single-device path) — the
+    # ExecutionPlan's heterogeneity made observable
+    wave_cps: list = dataclasses.field(default_factory=list)
 
 
 # ---------------------------------------------------------- chunk fn --------
@@ -203,58 +208,116 @@ def _batch_loss_scale(groups, standalone) -> float:
     return 1.0 / max(total_tokens, 1.0)
 
 
-def run_batch(cfg: ModelConfig, params, groups, standalone, *, k: int = 1,
-              blockwise_threshold: int = 8192, mesh=None,
-              plan_policy: str = "lpt", cp_threshold: int = 0):
+def coerce_plan(batch, plan, mesh, *, k, blockwise_threshold, plan_policy,
+                cp_threshold, where: str):
+    """-> (groups, standalone, ExecutionPlan). The executors' two calling
+    conventions, disambiguated in one place:
+
+      new:    where(cfg, params, (groups, standalone), plan)
+      legacy: where(cfg, params, groups, standalone, [mesh,] k=..,
+                    mesh=.., plan_policy=.., cp_threshold=..,
+                    blockwise_threshold=..)
+
+    A legacy call (4th positional is the standalone list, or any old kwarg
+    is present) emits DeprecationWarning and builds the equivalent
+    ExecutionPlan via `planner.plan_batch(policy=plan_policy)` — the
+    legacy "lpt"/"round_robin" policies reproduce the pre-planner waves
+    bit-for-bit. mesh=None legacy calls get the trivial single-device plan
+    without any unit costing (no host readbacks the old path didn't do)."""
+    legacy = (isinstance(plan, list) or mesh is not None
+              or any(v is not None for v in (k, blockwise_threshold,
+                                             plan_policy, cp_threshold)))
+    if legacy:
+        warnings.warn(
+            f"{where}(cfg, params, groups, standalone, mesh=..., k=..., "
+            "plan_policy=..., cp_threshold=..., blockwise_threshold=...) is "
+            "deprecated: build an ExecutionPlan with "
+            "repro.core.planner.plan_batch(groups, standalone, mesh, k=..., "
+            f"policy=...) and call {where}(cfg, params, "
+            "(groups, standalone), plan)", DeprecationWarning, stacklevel=3)
+        groups = batch
+        standalone = plan if isinstance(plan, list) else []
+        k = 1 if k is None else k
+        bt = 8192 if blockwise_threshold is None else blockwise_threshold
+        if mesh is None:
+            plan = ExecutionPlan(data=1, pipe=1, seq=1, chunk_size=0, k=k,
+                                 waves=[], policy=plan_policy or "lpt",
+                                 blockwise_threshold=bt)
+        else:
+            plan = planner.plan_batch(groups, standalone, mesh, k=k,
+                                      policy=plan_policy or "lpt",
+                                      cp_threshold=cp_threshold or 0,
+                                      blockwise_threshold=bt)
+        return groups, standalone, plan
+    groups, standalone = batch
+    if plan is None:
+        plan = ExecutionPlan(data=1, pipe=1, seq=1, chunk_size=0, k=1,
+                             waves=[], policy="solve")
+    if plan.world_size > 1 and plan.mesh is None:
+        raise ValueError(f"{where}: plan spans {plan.world_size} devices but "
+                         "carries no mesh — build it with plan_batch(..., "
+                         "mesh=<jax mesh>)")
+    return groups, standalone, plan
+
+
+def run_batch(cfg: ModelConfig, params, batch, plan: ExecutionPlan = None,
+              *, k: int = None, blockwise_threshold: int = None, mesh=None,
+              plan_policy: str = None, cp_threshold: int = None):
     """One full training micro-iteration over the chunks of a sampled batch:
     every dependent group via Algorithm 2, every standalone chunk as a
     singleton group; gradients accumulate across all of them (paper Fig. 3).
 
-    groups: list[list[chunk_batch]]; standalone: list[chunk_batch]
-    Returns (mean_loss, grads, stats).
+    batch: (groups, standalone) — list[list[chunk_batch]], [chunk_batch].
+    plan:  ExecutionPlan from `repro.core.planner.plan_batch` (None = the
+           trivial single-device plan). The plan carries EVERYTHING the old
+           kwargs did — mesh shape, per-wave cp groups, chunk assignments,
+           K, ChunkSize, blockwise_threshold — and this function only
+           dispatches on it. Returns (mean_loss, grads, stats).
 
-    mesh: optional jax mesh. With a "pipe" axis of size > 1 the batch runs
-    on the (data x pipe [x seq]) K-retention rotation pipeline
-    (`distributed.pipeline.run_batch_pipelined` — Algorithm 2 at pipeline
-    scale, K bounding live residual chunk-states per stage). With a "seq"
-    axis of size > 1 (and no pipe axis) the batch runs on the
-    context-parallel ring executor (`distributed.context_parallel
-    .run_batch_cp`: chunk tokens sharded over "seq", K/V circulating via
-    ppermute; ``cp_threshold`` keeps short chunks off the ring). Otherwise,
-    with >1 DP devices the batch is executed by the DP orchestrator
-    (`_run_batch_dp`): the dp_balance planner assigns units to ranks and the
-    work runs as batch-dim-sharded waves. With a 1-device mesh (or
-    mesh=None) this is the plain single-device path — bit-for-bit the
-    pre-DP behavior."""
+    Dispatch by the plan's mesh: a "pipe" axis > 1 runs the (data x pipe
+    [x seq]) K-retention rotation pipeline (`distributed.pipeline
+    .run_batch_pipelined`); a "seq" axis > 1 (no pipe) runs the
+    context-parallel executor (`distributed.context_parallel.run_batch_cp`)
+    — per the plan, each wave either rides the "seq" ring (cp > 1) or packs
+    cp=1 units over the whole data x seq device block without paying any
+    ring hops. Plain DP runs the planned waves batch-dim-sharded; a
+    1-device plan (or plan=None) is the plain single-device path —
+    bit-for-bit the pre-DP behavior.
+
+    The legacy signature ``run_batch(cfg, params, groups, standalone,
+    k=..., mesh=..., plan_policy=..., cp_threshold=...)`` still works via a
+    deprecation shim that builds the equivalent ExecutionPlan (see
+    `coerce_plan`)."""
+    groups, standalone, plan = coerce_plan(
+        batch, plan, mesh, k=k, blockwise_threshold=blockwise_threshold,
+        plan_policy=plan_policy, cp_threshold=cp_threshold,
+        where="run_batch")
+    mesh = plan.mesh
     if mesh is not None and sharding.pipe_size(mesh) > 1:
         from repro.distributed import pipeline
-        return pipeline.run_batch_pipelined(
-            cfg, params, groups, standalone, mesh, k=k,
-            blockwise_threshold=blockwise_threshold, plan_policy=plan_policy,
-            cp_threshold=cp_threshold)
+        return pipeline.run_batch_pipelined(cfg, params,
+                                            (groups, standalone), plan)
     if mesh is not None and sharding.seq_size(mesh) > 1:
         from repro.distributed import context_parallel
-        return context_parallel.run_batch_cp(
-            cfg, params, groups, standalone, mesh, k=k,
-            blockwise_threshold=blockwise_threshold, plan_policy=plan_policy,
-            cp_threshold=cp_threshold)
+        return context_parallel.run_batch_cp(cfg, params,
+                                             (groups, standalone), plan)
     if mesh is not None and sharding.dp_size(mesh) > 1:
-        return _run_batch_dp(cfg, params, groups, standalone, mesh, k=k,
-                             blockwise_threshold=blockwise_threshold,
-                             plan_policy=plan_policy)
+        scale = _batch_loss_scale(groups, standalone)
+        return run_planned_waves(cfg, params, plan, scale=scale)
     scale = _batch_loss_scale(groups, standalone)
     grads = None
     loss = 0.0
     stats = SchedulerStats()
+    bt = plan.blockwise_threshold
     for g in groups:
-        l, grads, stats = run_group(cfg, params, g, k=k, loss_scale=scale,
-                                    grads=grads, stats=stats,
-                                    blockwise_threshold=blockwise_threshold)
+        l, grads, stats = run_group(cfg, params, g, k=plan.k,
+                                    loss_scale=scale, grads=grads,
+                                    stats=stats, blockwise_threshold=bt)
         loss += l
     for c in standalone:
-        l, grads, stats = run_group(cfg, params, [c], k=k, loss_scale=scale,
-                                    grads=grads, stats=stats,
-                                    blockwise_threshold=blockwise_threshold)
+        l, grads, stats = run_group(cfg, params, [c], k=plan.k,
+                                    loss_scale=scale, grads=grads,
+                                    stats=stats, blockwise_threshold=bt)
         loss += l
     return loss, grads, stats
 
@@ -275,12 +338,15 @@ def stack_chunk_rows(rows):
             for kk in keys}
 
 
-def stack_wave_slots(cfg: ModelConfig, wave, mesh):
-    """One dp_balance wave -> its chunk-slot stream: a list of (R, C)
-    stacked batches, one per slot, batch-dim sharded over the DP axes.
-    Ranks whose unit is shorter than the wave's longest pad with dummy
-    all-masked chunks (zero loss, zero grads, pure idle — the bubble the
-    planner minimizes). Shared by the DP and pipeline executors so their
+def stack_wave_slots(cfg: ModelConfig, wave, mesh, *, cp: int = 1):
+    """One planned wave's slot list -> its chunk-slot stream: a list of
+    (R, C) stacked batches, one per lockstep slot, placed per the wave's cp
+    (`sharding.wave_put`: ring waves shard rows over the DP axes and tokens
+    over "seq"; cp=1 waves on a seq mesh pack rows over the whole
+    data x seq block and leave tokens whole — no ring hops). Ranks whose
+    unit is shorter than the wave's longest pad with dummy all-masked
+    chunks (zero loss, zero grads, pure idle — the bubble the planner
+    minimizes). Shared by the DP, CP and pipeline executors so their
     padding/stacking semantics can never drift apart."""
     live = [u for u in wave if u is not None]
     n_max = max(u.n_chunks for u in live)
@@ -289,74 +355,43 @@ def stack_wave_slots(cfg: ModelConfig, wave, mesh):
     for i in range(n_max):
         rows = [u.payload[i] if (u is not None and i < u.n_chunks)
                 else dummy_chunk_row(template) for u in wave]
-        slots.append(sharding.dp_put(cfg, stack_chunk_rows(rows), mesh))
+        slots.append(sharding.wave_put(cfg, stack_chunk_rows(rows), mesh,
+                                       cp=cp))
     return slots
 
 
-def run_planned_waves(cfg: ModelConfig, params, units, mesh, *, k: int,
-                      scale: float, blockwise_threshold: int = 8192,
-                      plan_policy: str = "lpt", chunk_fn_for_wave=None,
-                      wave_done=None):
+def run_planned_waves(cfg: ModelConfig, params, plan: ExecutionPlan, *,
+                      scale: float, chunk_fn_for_wave=None, wave_done=None):
     """Shared wave orchestration for the DP and context-parallel executors:
-    plan the units onto ranks, stack each lockstep wave into (R, C) slots,
-    run each wave through the Algorithm-2 executor. Returns
-    (total_loss, grads, stats).
+    walk the ExecutionPlan's waves, stack each into (R, C) slots placed for
+    its cp, run each through the Algorithm-2 executor. Returns
+    (total_loss, grads, stats). Gradient math is invariant to the plan
+    (grads sum linearly and dummy rows contribute exactly zero), so ANY
+    plan — legacy lpt, solved heterogeneous — matches single-device.
 
-    chunk_fn_for_wave: optional (wave, slots) -> chunk_fn override for
-    `run_group` (None = the default jitted chunk fn) — the CP executor
-    swaps in its ring trunk per wave here.
+    chunk_fn_for_wave: optional (wave: WavePlan, slots) -> chunk_fn override
+    for `run_group` (None = the default jitted chunk fn) — the CP executor
+    swaps in its ring trunk on cp > 1 waves here.
     wave_done: optional (wave, slots, stats, n_fwd, n_bwd) callback after
     each wave (n_fwd counts forwards incl. recomputes) — used for ring-hop
     accounting."""
-    plan = dp_balance.plan_assignment(units, sharding.dp_size(mesh),
-                                      policy=plan_policy)
-    waves, _ = dp_balance.wave_schedule(plan)
-
+    mesh = plan.mesh
     params_r = sharding.replicate_put(mesh, params)
     grads, total_loss = None, 0.0
     stats = SchedulerStats()
-    for wave in waves:
-        slots = stack_wave_slots(cfg, wave, mesh)
+    for wave in plan.waves:
+        slots = stack_wave_slots(cfg, wave.slots, mesh, cp=wave.cp)
         fn = chunk_fn_for_wave(wave, slots) if chunk_fn_for_wave else None
         f0 = stats.forward_calls + stats.recompute_calls
         b0 = stats.backward_calls
-        l, grads, stats = run_group(cfg, params_r, slots, k=k,
-                                    loss_scale=scale, grads=grads,
-                                    stats=stats,
-                                    blockwise_threshold=blockwise_threshold,
-                                    chunk_fn=fn)
+        l, grads, stats = run_group(
+            cfg, params_r, slots, k=plan.k, loss_scale=scale, grads=grads,
+            stats=stats, blockwise_threshold=plan.blockwise_threshold,
+            chunk_fn=fn)
+        stats.wave_cps.append(wave.cp)
         if wave_done is not None:
             wave_done(wave, slots, stats,
                       stats.forward_calls + stats.recompute_calls - f0,
                       stats.backward_calls - b0)
         total_loss = total_loss + l
     return total_loss, grads, stats
-
-
-def _run_batch_dp(cfg: ModelConfig, params, groups, standalone, mesh, *,
-                  k: int = 1, blockwise_threshold: int = 8192,
-                  plan_policy: str = "lpt"):
-    """Data-parallel Algorithm 2 (paper's DP-balanced chunk-group training).
-
-    The dp_balance planner assigns every dependent group / packed standalone
-    chunk to a DP rank by token-work (LPT). Execution is lockstep *waves*:
-    one work unit per rank per wave, each unit's chunk i stacked across ranks
-    into a (R, C) batch whose batch dim is sharded over the mesh's data axes
-    — so rank r's work physically runs on device r, params stay replicated,
-    and the gradient psum across ranks is inserted by GSPMD when the vjp
-    pulls the (replicated) param cotangent out of the (sharded) batch loss.
-    Ranks whose unit is shorter than the wave's longest pad with dummy
-    all-masked chunks: zero loss, zero grads, pure idle — the same bubble a
-    real cluster would pay, which is what the planner minimizes.
-
-    Numerically equivalent to the single-device path (same loss scale, same
-    per-row math; fp32 summation order differs -> ~1e-6 relative). Caveat:
-    with a MoE aux loss coefficient > 0, dummy rows add router aux terms the
-    single-device path does not have (padding tokens already do today).
-    """
-    scale = _batch_loss_scale(groups, standalone)
-    units = dp_balance.units_from_materialized(groups, standalone, k=k,
-                                               static_shapes=True)
-    return run_planned_waves(cfg, params, units, mesh, k=k, scale=scale,
-                             blockwise_threshold=blockwise_threshold,
-                             plan_policy=plan_policy)

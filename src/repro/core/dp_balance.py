@@ -76,20 +76,25 @@ def chunk_token_work(tokens_used: int, prefix_len: int, seg_lengths=None, *,
 class WorkUnit:
     """One indivisible piece of DP work: a dependent group or a standalone
     packed chunk. ``payload`` is opaque to the planner (the executor stores
-    its list of materialized chunk batches there). ``ring`` marks units the
-    context-parallel executor will run sharded over the "seq" axis (their
-    ``work`` is already divided by cp — a CP group acts as one fast logical
-    rank); non-ring units replicate over "seq" and keep their full cost."""
+    its list of materialized chunk batches there). ``cp`` is THIS unit's
+    context-parallel degree — heterogeneous plans give different units
+    different cp, so it lives on the unit, not as one global knob — and
+    ``work`` is already divided by it (a CP group acts as one fast logical
+    rank). ``ring`` (== cp > 1) marks units the context-parallel executor
+    runs sharded over the "seq" axis; non-ring units replicate over "seq"
+    (or pack the idle "seq" ranks) and keep their full cost."""
     kind: str                    # "group" | "standalone"
     key: Any                     # group id / standalone index (for reports)
     n_chunks: int
     work: float
     payload: Any = None
     ring: bool = False
+    cp: int = 1
 
     def __repr__(self):
         return (f"WorkUnit({self.kind}:{self.key}, n={self.n_chunks}, "
-                f"work={self.work:.1f}{', ring' if self.ring else ''})")
+                f"work={self.work:.1f}"
+                f"{f', cp={self.cp}' if self.ring else ''})")
 
 
 def cp_eligible(n_chunks: int, chunk_size: int, cp: int,
@@ -132,26 +137,36 @@ def unit_work(chunk_works, k: int = 1) -> float:
 
 
 def _cp_adjust(work: float, n_chunks: int, chunk_size: int, cp: int,
-               cp_threshold: int):
-    """-> (work, ring). A ring unit's span is token-sharded over cp devices,
-    so the CP group behaves as one logical rank at 1/cp the cost."""
+               cp_threshold: int, cp_for=None):
+    """-> (work, ring, unit_cp). A ring unit's span is token-sharded over
+    its cp devices, so the CP group behaves as one logical rank at 1/cp the
+    cost. ``cp_for`` (a ``(n_chunks, chunk_size) -> int`` callable)
+    overrides the global cp/threshold gate with a per-unit degree —
+    heterogeneous plans assign different cp to different units and the
+    imbalance/makespan reports must cost each unit at ITS degree, not one
+    global one."""
+    if cp_for is not None:
+        c = max(1, int(cp_for(n_chunks, chunk_size)))
+        return work / c, c > 1, c
     if cp_eligible(n_chunks, chunk_size, cp, cp_threshold):
-        return work / cp, True
-    return work, False
+        return work / cp, True, cp
+    return work, False, 1
 
 
 def units_from_chunks(groups: dict, standalone: list, *, k: int = 1,
                       horizon: int = ATTN_HORIZON,
                       static_shapes: bool = False, cp: int = 1,
-                      cp_threshold: int = 0) -> list:
+                      cp_threshold: int = 0, cp_for=None) -> list:
     """Build WorkUnits from Algorithm-1 output (`chunking.group_chunks`).
 
     groups: {group_id: [Chunk ordered]}; standalone: [Chunk].
     static_shapes: cost dependent chunks at the capacity-padded KV length
     (what the static-shape StateStore actually computes — masked slots still
     burn FLOPs) instead of the exact grow-by-C prefix.
-    cp/cp_threshold: context-parallel degree and ring-eligibility span (see
-    `cp_eligible`)."""
+    cp/cp_threshold: one global context-parallel degree + ring-eligibility
+    span (see `cp_eligible`). cp_for: per-unit override, ``(n_chunks,
+    chunk_size) -> cp`` — use this to cost a heterogeneous (per-wave cp)
+    plan; the returned units carry their own ``cp``."""
     units = []
     for gid, chunks in groups.items():
         cap = prefix_capacity(len(chunks), chunks[0].chunk_size)
@@ -160,18 +175,19 @@ def units_from_chunks(groups: dict, standalone: list, *, k: int = 1,
                                   else c.index_in_group * c.chunk_size,
                                   horizon=horizon)
                  for c in chunks]
-        w, ring = _cp_adjust(unit_work(works, k=k), len(chunks),
-                             chunks[0].chunk_size, cp, cp_threshold)
+        w, ring, ucp = _cp_adjust(unit_work(works, k=k), len(chunks),
+                                  chunks[0].chunk_size, cp, cp_threshold,
+                                  cp_for)
         units.append(WorkUnit("group", gid, len(chunks), w, payload=chunks,
-                              ring=ring))
+                              ring=ring, cp=ucp))
     for idx, c in enumerate(standalone):
         w = chunk_token_work(c.tokens_used, 0,
                              seg_lengths=[it.length for it in c.items],
                              horizon=horizon)
-        w, ring = _cp_adjust(unit_work([w], k=k), 1, c.chunk_size, cp,
-                             cp_threshold)
+        w, ring, ucp = _cp_adjust(unit_work([w], k=k), 1, c.chunk_size, cp,
+                                  cp_threshold, cp_for)
         units.append(WorkUnit("standalone", idx, 1, w, payload=[c],
-                              ring=ring))
+                              ring=ring, cp=ucp))
     return units
 
 
@@ -193,11 +209,11 @@ def _batch_chunk_work(chunk_batch, index_in_group: int, dependent: bool, *,
 def units_from_materialized(group_batches: list, standalone_batches: list, *,
                             k: int = 1, horizon: int = ATTN_HORIZON,
                             static_shapes: bool = False, cp: int = 1,
-                            cp_threshold: int = 0) -> list:
+                            cp_threshold: int = 0, cp_for=None) -> list:
     """Build WorkUnits from `launch.train.build_host_batches` output:
     group_batches: list[list[chunk_batch dict]]; standalone: [chunk_batch].
     Prefer host (numpy) batches — device arrays cost one blocking readback
-    per chunk here. static_shapes / cp / cp_threshold: see
+    per chunk here. static_shapes / cp / cp_threshold / cp_for: see
     `units_from_chunks`."""
     units = []
     for gid, batches in enumerate(group_batches):
@@ -208,16 +224,17 @@ def units_from_materialized(group_batches: list, standalone_batches: list, *,
         works = [_batch_chunk_work(b, i, True, horizon=horizon,
                                    prefix_override=cap)
                  for i, b in enumerate(batches)]
-        w, ring = _cp_adjust(unit_work(works, k=k), len(batches), C, cp,
-                             cp_threshold)
+        w, ring, ucp = _cp_adjust(unit_work(works, k=k), len(batches), C, cp,
+                                  cp_threshold, cp_for)
         units.append(WorkUnit("group", gid, len(batches), w,
-                              payload=batches, ring=ring))
+                              payload=batches, ring=ring, cp=ucp))
     for idx, b in enumerate(standalone_batches):
         C = int(np.asarray(b["segment_ids"]).shape[1])
         w = _batch_chunk_work(b, 0, False, horizon=horizon)
-        w, ring = _cp_adjust(unit_work([w], k=k), 1, C, cp, cp_threshold)
+        w, ring, ucp = _cp_adjust(unit_work([w], k=k), 1, C, cp,
+                                  cp_threshold, cp_for)
         units.append(WorkUnit("standalone", idx, 1, w, payload=[b],
-                              ring=ring))
+                              ring=ring, cp=ucp))
     return units
 
 
@@ -312,8 +329,26 @@ def wave_schedule(plan: DPPlan):
 
 
 def compare_policies(units: list, world_size: int,
-                     policies=("round_robin", "lpt")) -> dict:
-    """Benchmark hook: plan under each policy, report imbalance metrics."""
+                     policies=("round_robin", "lpt"), *,
+                     cp_for=None, chunk_size: int = 0) -> dict:
+    """Benchmark hook: plan under each policy, report imbalance metrics.
+
+    Heterogeneous plans: units may carry different per-unit ``cp`` (built
+    with ``units_from_chunks(..., cp_for=...)``), or pass ``cp_for`` +
+    ``chunk_size`` here to re-cost the given units at per-unit degrees
+    before planning. Either way every unit is costed at ITS cp — not one
+    global degree — so ``max_rank_work``/``imbalance`` stay correct for
+    mixed-cp batches; ``ring_work_fraction`` reports how much of the total
+    work rides a ring."""
+    if cp_for is not None:
+        units = [dataclasses.replace(
+            u, work=u.work * u.cp / max(1, int(cp_for(u.n_chunks,
+                                                      chunk_size))),
+            cp=max(1, int(cp_for(u.n_chunks, chunk_size))),
+            ring=int(cp_for(u.n_chunks, chunk_size)) > 1)
+            for u in units]
+    total = sum(u.work for u in units)
+    ring_work = sum(u.work for u in units if u.cp > 1)
     out = {}
     for pol in policies:
         plan = plan_assignment(units, world_size, policy=pol)
@@ -324,5 +359,6 @@ def compare_policies(units: list, world_size: int,
             "max_min_ratio": plan.max_min_ratio,
             "n_waves": ws.n_waves,
             "padded_slot_fraction": ws.padded_fraction,
+            "ring_work_fraction": ring_work / total if total else 0.0,
         }
     return out

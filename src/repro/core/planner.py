@@ -1,0 +1,396 @@
+"""Heterogeneous parallelism planner — solve for the per-wave config.
+
+``dp_balance`` costs a *fixed* configuration: one global context-parallel
+degree, one chunk size, one K, applied to every lockstep wave. The paper's
+long-tail length distribution makes any single choice wrong for most waves:
+the 256K-token tail group wants its tokens sharded over a wide "seq" ring
+(per-device K/V and per-tick compute both scale 1/cp), while the packed
+short chunks that dominate the batch by count are ring-ineligible — ppermute
+latency and the per-tick launch overhead never amortize, and a ring wave
+only has ``data`` slots where a cp=1 wave can pack ``data * seq`` units in
+parallel on the very same devices (FlexSP's per-bucket group solving).
+
+This module turns that observation into a solver:
+
+  * :func:`solve_waves` partitions a batch's WorkUnits into lockstep waves
+    and picks, **per wave**, whether it rides the "seq" ring (cp = mesh seq
+    size, ``data`` slots) or packs cp=1 units over the whole device block
+    (``data * seq`` slots). The split is chosen globally across the whole
+    batch — Skrull-style scheduling over all waves, not greedily within one
+    — by exact subset enumeration on small instances and a sorted-prefix
+    scan (which always contains the all-ring / all-packed fixed configs)
+    at scale.
+  * :func:`wave_cost` is the closed-form score: static-shape tick cost
+    (every tick computes the full capacity-padded ChunkSize slot — masked
+    slots burn FLOPs) through ``schedule_sim.simulate_rotation``, plus an
+    explicit ring-communication term built on ``dp_balance.ring_step_count``.
+    Everything is host integer/float math: the solver is CI-testable with
+    no devices, and the executors report the matching schedule accounting.
+  * :class:`ExecutionPlan` is the single product all three executors
+    consume (``chunked_step.run_batch``, ``distributed.pipeline
+    .run_batch_pipelined``, ``distributed.context_parallel.run_batch_cp``):
+    mesh shape, per-wave cp groups, chunk-slot assignments, K, ChunkSize.
+    Waves whose plan says cp=1 are routed to the replicated/packed path and
+    never pay ring hops.
+
+``plan_batch`` is the front door; ``policy="solve"`` gives the
+heterogeneous plan, ``policy="lpt"``/``"round_robin"`` reproduce the
+pre-planner behavior exactly (global cp + ``cp_threshold`` gating through
+``dp_balance.plan_assignment``/``wave_schedule``) for the deprecation shim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import dp_balance
+from repro.core.dp_balance import prefix_capacity, ring_step_count
+from repro.core.schedule_sim import simulate_rotation
+
+# ------------------------------------------------------------ cost model ----
+# Per-tick under-saturation overhead in token units — same constant family as
+# tuning.seq_time: a rotation/wave tick pays kernel-launch + dispatch cost
+# that does NOT shrink when the ring divides the tokens. This term is what
+# makes short chunks ring-ineligible.
+TICK_OVERHEAD = 2000.0
+# Fixed per-ppermute-hop latency (token units — a blocking neighbor
+# collective costs the equivalent of ~512 tokens of trunk compute) and the
+# bandwidth cost of moving one K/V token around the ring. Hops are counted
+# by dp_balance.ring_step_count — the same accounting the executors report
+# in stats.ring_steps — so the comm term is pinned to the real hop count.
+RING_LATENCY = 512.0
+RING_BW = 0.02
+
+# Exact-solve bound: at or below this many units the solver enumerates every
+# ring/packed subset (2^n scored partitions); above it, the sorted-prefix
+# scan. tests/test_planner.py pins solver == brute force inside this bound.
+EXACT_UNITS = 12
+
+
+def tick_cost(n_chunks: int, chunk_size: int, cp: int = 1, *,
+              horizon: float = dp_balance.ATTN_HORIZON,
+              overhead: float = TICK_OVERHEAD) -> float:
+    """Cost of ONE lockstep chunk tick of a wave whose longest unit spans
+    ``n_chunks`` chunks, in token units.
+
+    Static-shape semantics (what the executors actually run): every tick
+    computes a full ChunkSize slot against the capacity-padded StateStore
+    prefix — ``prefix_capacity(n, C)`` keys, masked slots burn FLOPs — so
+    the cost depends only on (n_chunks, chunk_size, cp), never on
+    tokens_used. Compute divides by cp (the ring shards tokens); the
+    per-tick overhead does not.
+    """
+    cap = prefix_capacity(n_chunks, chunk_size)
+    quad = chunk_size * (cap + chunk_size) / horizon
+    return (chunk_size + quad) / cp + overhead
+
+
+def ring_comm_cost(n_chunks: int, chunk_size: int, cp: int,
+                   k: int = 1) -> float:
+    """Communication cost of running one ring unit through Algorithm 2:
+    ``ring_step_count`` ppermute hops (the executors' ``stats.ring_steps``
+    with n_layers=1), each paying fixed latency + the bandwidth cost of the
+    circulating (cap + C)/cp K/V shard."""
+    if cp <= 1:
+        return 0.0
+    hops = ring_step_count(n_chunks, cp, k=k)
+    shard = (prefix_capacity(n_chunks, chunk_size) + chunk_size) / cp
+    return hops * (RING_LATENCY + RING_BW * shard)
+
+
+def wave_cost(n_chunks: int, chunk_size: int, k: int, cp: int,
+              pp: int = 1) -> float:
+    """Closed-form cost of one lockstep wave: the Algorithm-2 schedule of
+    its padded ``n_chunks`` slot stream (every slot F + 2x B, first N-K
+    recomputed), at the static-shape tick cost, run through the rotation
+    pipeline when pp > 1 (``simulate_rotation`` — at pp == 1 this reduces
+    to exactly (3N + recompute) ticks), plus the ring-communication term.
+    """
+    if n_chunks <= 0:
+        return 0.0
+    unit = tick_cost(n_chunks, chunk_size, cp)
+    sched = simulate_rotation([n_chunks], max(pp, 1), k, unit=unit).makespan
+    return sched + ring_comm_cost(n_chunks, chunk_size, cp, k=k)
+
+
+# ------------------------------------------------------------------ plan ----
+@dataclasses.dataclass(frozen=True)
+class WavePlan:
+    """One lockstep wave of the plan.
+
+    cp:    "seq"-ring degree every slot of this wave runs at. 1 means the
+           wave packs cp=1 units over the whole device block (data * seq
+           slots, no ring hops); > 1 means each slot's tokens shard over a
+           cp-wide "seq" ring (data slots).
+    slots: tuple[Optional[WorkUnit]] of length = wave width; None slots are
+           idle ranks padded with dummy all-masked chunks by the executor.
+    """
+    cp: int
+    slots: tuple
+
+    @property
+    def width(self) -> int:
+        return len(self.slots)
+
+    @property
+    def n_chunks(self) -> int:
+        """Lockstep slot count: every unit is padded to the wave's longest."""
+        return max((u.n_chunks for u in self.slots if u is not None),
+                   default=0)
+
+    def __repr__(self):
+        live = sum(u is not None for u in self.slots)
+        return (f"WavePlan(cp={self.cp}, width={self.width}, "
+                f"units={live}, n_chunks={self.n_chunks})")
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """The solved launch configuration all three executors consume.
+
+    Mesh shape (data x pipe x seq), the per-wave cp groups with their
+    chunk-slot assignments (``waves``), and the Algorithm-2 knobs
+    (``k``, ``chunk_size``, ``blockwise_threshold``). Build with
+    :func:`plan_batch` (or the executors' deprecation shim builds one from
+    the old kwargs). ``mesh`` is the live jax mesh when the plan is meant
+    to execute; shape-only plans (benchmarks, tuning) leave it None.
+    """
+    data: int
+    pipe: int
+    seq: int
+    chunk_size: int
+    k: int
+    waves: list                      # list[WavePlan]
+    policy: str = "solve"
+    blockwise_threshold: int = 8192
+    predicted_makespan: float = 0.0
+    mesh: Any = None
+
+    @property
+    def mesh_shape(self) -> dict:
+        return {"data": self.data, "pipe": self.pipe, "seq": self.seq}
+
+    @property
+    def world_size(self) -> int:
+        return self.data * self.pipe * self.seq
+
+    @property
+    def wave_cps(self) -> list:
+        return [w.cp for w in self.waves]
+
+    @property
+    def heterogeneous(self) -> bool:
+        return len(set(self.wave_cps)) > 1
+
+    def describe(self) -> str:
+        rings = sum(1 for w in self.waves if w.cp > 1)
+        return (f"ExecutionPlan[{self.policy}] mesh=(data={self.data}, "
+                f"pipe={self.pipe}, seq={self.seq}) C={self.chunk_size} "
+                f"K={self.k} waves={len(self.waves)} "
+                f"(ring={rings}, packed={len(self.waves) - rings}) "
+                f"makespan={self.predicted_makespan:.0f}")
+
+
+def plan_makespan(waves, chunk_size: int, k: int, pp: int = 1) -> float:
+    """Total simulated makespan of a wave list — the additive lockstep sum
+    the executors realize (waves run back to back on the whole mesh)."""
+    return sum(wave_cost(w.n_chunks, chunk_size, k, w.cp, pp=pp)
+               for w in waves)
+
+
+# ---------------------------------------------------------------- solver ----
+def _unit_order(units) -> list:
+    """Deterministic largest-first order: waves cost the max of their slots,
+    so grouping sorted neighbors minimizes the sum of per-wave maxima."""
+    return sorted(units, key=lambda u: (-u.n_chunks, -u.work, u.kind,
+                                        str(u.key)))
+
+
+def _pack(ordered, width: int, cp: int) -> list:
+    """Group an ordered unit list into width-slot waves (last wave padded
+    with None slots)."""
+    waves = []
+    for i in range(0, len(ordered), width):
+        block = ordered[i:i + width]
+        slots = tuple(block) + (None,) * (width - len(block))
+        waves.append(WavePlan(cp=cp, slots=slots))
+    return waves
+
+
+def _score_split(ring_units, packed_units, *, data: int, seq: int,
+                 chunk_size: int, k: int, pp: int):
+    waves = (_pack(ring_units, data, seq) +
+             _pack(packed_units, data * seq, 1))
+    return waves, plan_makespan(waves, chunk_size, k, pp=pp)
+
+
+def solve_waves(units, *, data: int, seq: int, pp: int = 1, k: int = 1,
+                chunk_size: int, exact_limit: int = EXACT_UNITS):
+    """Solve the per-wave (cp, grouping) assignment for one batch.
+
+    Returns (waves, makespan). Ring waves run cp=seq over ``data`` slots;
+    packed waves run cp=1 over ``data * seq`` slots. With ``len(units) <=
+    exact_limit`` every ring/packed subset is scored (exact); above that, a
+    sorted-prefix scan — the longest i units ride the ring — which by
+    construction contains both fixed extremes (i=0: pure cp=1, i=n: pure
+    cp=seq), so the solved plan is never worse than either fixed config.
+    """
+    ordered = _unit_order(units)
+    n = len(ordered)
+    if seq <= 1 or n == 0:
+        return _score_split(ordered, [], data=data, seq=1,
+                            chunk_size=chunk_size, k=k, pp=pp)
+
+    best = None
+    if n <= exact_limit:
+        splits = ((tuple(u for j, u in enumerate(ordered) if mask >> j & 1),
+                   tuple(u for j, u in enumerate(ordered)
+                         if not mask >> j & 1))
+                  for mask in range(1 << n))
+    else:
+        splits = ((tuple(ordered[:i]), tuple(ordered[i:]))
+                  for i in range(n + 1))
+    for ring, packed in splits:
+        waves, m = _score_split(list(ring), list(packed), data=data, seq=seq,
+                                chunk_size=chunk_size, k=k, pp=pp)
+        if best is None or m < best[1] - 1e-9:
+            best = (waves, m)
+    return best
+
+
+def fixed_waves(units, *, world: int, cp: int, pp: int = 1, k: int = 1,
+                chunk_size: int):
+    """Score a FIXED (cp, C, K) config — every wave at the same cp, width
+    world // cp — the single-config baseline the solver must beat.
+    Returns (waves, makespan)."""
+    assert world % cp == 0, (world, cp)
+    ordered = _unit_order(units)
+    if cp > 1:
+        waves = _pack(ordered, world // cp, cp)
+    else:
+        waves = _pack(ordered, world, 1)
+    return waves, plan_makespan(waves, chunk_size, k, pp=pp)
+
+
+# ----------------------------------------------------------- plan_batch -----
+def _mesh_shape(mesh) -> tuple:
+    """-> (data, pipe, seq) for a jax mesh / shape dict / None. Duck-typed
+    so this module never imports jax (the solver is pure host math)."""
+    if mesh is None:
+        return 1, 1, 1
+    if isinstance(mesh, dict):
+        return (int(mesh.get("data", 1)), int(mesh.get("pipe", 1)),
+                int(mesh.get("seq", 1)))
+    sizes = dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+    data = int(sizes.get("pod", 1)) * int(sizes.get("data", 1))
+    return data, int(sizes.get("pipe", 1)), int(sizes.get("seq", 1))
+
+
+def _legacy_waves(units, *, data: int, seq: int, policy: str,
+                  cp_threshold: int):
+    """The pre-planner wave former, bit-for-bit: dp_balance LPT/round-robin
+    rank streams -> lockstep waves of width ``data``; a wave rides the ring
+    at cp=seq iff any of its units is ring-eligible (global cp +
+    cp_threshold gating), and cp=1 waves replicate over "seq" (width stays
+    ``data``, NOT data*seq — exactly what the old executors did)."""
+    plan = dp_balance.plan_assignment(units, data, policy=policy)
+    waves, _ = dp_balance.wave_schedule(plan)
+    out = []
+    for wave in waves:
+        ring = seq > 1 and any(u is not None and u.ring for u in wave)
+        out.append(WavePlan(cp=seq if ring else 1, slots=tuple(wave)))
+    return out
+
+
+def plan_batch(groups, standalone, mesh=None, *, k: int = 1,
+               policy: str = "solve", cp_threshold: int = 0,
+               blockwise_threshold: int = 8192,
+               horizon: float = dp_balance.ATTN_HORIZON) -> ExecutionPlan:
+    """Solve (or legacy-form) the ExecutionPlan for one materialized batch.
+
+    groups / standalone: `launch.train.build_host_batches` output — the
+    payloads ride into the plan's WorkUnits, so the executors can stack the
+    planned waves directly.
+    mesh: jax mesh, {"data","pipe","seq"} shape dict, or None (single
+    device). policy: "solve" = heterogeneous per-wave cp solver; "lpt" /
+    "round_robin" = the pre-planner global-cp former (used by the
+    deprecation shim; honors ``cp_threshold``).
+    """
+    data, pipe, seq = _mesh_shape(mesh)
+    chunk_size = 0
+    if groups:
+        chunk_size = int(np.asarray(groups[0][0]["segment_ids"]).shape[1])
+    elif standalone:
+        chunk_size = int(np.asarray(standalone[0]["segment_ids"]).shape[1])
+
+    if policy in ("lpt", "round_robin"):
+        units = dp_balance.units_from_materialized(
+            groups, standalone, k=k, horizon=horizon, static_shapes=True,
+            cp=seq, cp_threshold=cp_threshold)
+        waves = _legacy_waves(units, data=data, seq=seq, policy=policy,
+                              cp_threshold=cp_threshold)
+    elif policy == "solve":
+        units = dp_balance.units_from_materialized(
+            groups, standalone, k=k, horizon=horizon, static_shapes=True)
+        waves, _ = solve_waves(units, data=data, seq=seq, pp=pipe, k=k,
+                               chunk_size=chunk_size)
+    else:
+        raise ValueError(f"unknown plan policy {policy!r} "
+                         "(want 'solve', 'lpt' or 'round_robin')")
+
+    return ExecutionPlan(
+        data=data, pipe=pipe, seq=seq, chunk_size=chunk_size, k=k,
+        waves=waves, policy=policy, blockwise_threshold=blockwise_threshold,
+        predicted_makespan=plan_makespan(waves, chunk_size, k, pp=pipe),
+        mesh=mesh if not isinstance(mesh, dict) else None)
+
+
+def plan_lengths(lengths: dict, chunk_size: int, mesh=None, *, k: int = 1,
+                 policy: str = "solve", **kw) -> ExecutionPlan:
+    """Shape-only planning from raw sequence lengths (no materialization):
+    Algorithm 1 chunking -> WorkUnits -> plan. Payloads are the Chunk
+    metadata, so the plan scores/simulates but does not execute — the
+    tuner and benchmarks use this."""
+    from repro.core.chunking import construct_chunks, group_chunks
+    g, s = group_chunks(construct_chunks(lengths, chunk_size))
+    data, pipe, seq = _mesh_shape(mesh)
+    units = dp_balance.units_from_chunks(g, s, k=k, static_shapes=True)
+    if policy == "solve":
+        waves, _ = solve_waves(units, data=data, seq=seq, pp=pipe, k=k,
+                               chunk_size=chunk_size)
+    else:
+        units = dp_balance.units_from_chunks(
+            g, s, k=k, static_shapes=True, cp=seq,
+            cp_threshold=kw.get("cp_threshold", 0))
+        waves = _legacy_waves(units, data=data, seq=seq, policy=policy,
+                              cp_threshold=kw.get("cp_threshold", 0))
+    return ExecutionPlan(
+        data=data, pipe=pipe, seq=seq, chunk_size=chunk_size, k=k,
+        waves=waves, policy=policy,
+        predicted_makespan=plan_makespan(waves, chunk_size, k, pp=pipe))
+
+
+def solve_world(units, *, world: int, pp: int = 1, k: int = 1,
+                chunk_size: int, seqs=None):
+    """Search mesh factorizations too: for each (data, seq) with
+    data * seq == world // pp, solve the heterogeneous wave split; return
+    (best_waves, best_makespan, (data, seq)). ``seqs`` restricts the
+    candidate seq sizes (default: every divisor)."""
+    slots = world // max(pp, 1)
+    cands = [s for s in (seqs or _divisors(slots))]
+    best = None
+    for seq in cands:
+        if slots % seq:
+            continue
+        waves, m = solve_waves(units, data=slots // seq, seq=seq, pp=pp,
+                               k=k, chunk_size=chunk_size)
+        if best is None or m < best[1] - 1e-9:
+            best = (waves, m, (slots // seq, seq))
+    return best
+
+
+def _divisors(n: int) -> list:
+    return [d for d in range(1, n + 1) if n % d == 0]

@@ -25,11 +25,34 @@ from repro.core.schedule_sim import chunks_to_microbatches, simulate_rotation
 
 
 @dataclasses.dataclass(frozen=True)
+class LaunchConfig:
+    """One ranked launch candidate from `grid_search`: a complete config
+    (mesh factorization + Algorithm-2 knobs) with its predicted cost.
+    ``heterogeneous`` marks the planner-solved per-wave-cp entry (scored by
+    `planner.solve_world`) rather than a fixed global cp."""
+    dp: int
+    pp: int
+    cp: int
+    chunk_size: int
+    k: int
+    makespan: float              # mean simulated makespan (lower = better)
+    memory_tokens: int           # K*C live residuals + per-device KV slots
+    heterogeneous: bool = False
+
+    def describe(self) -> str:
+        kind = "solve" if self.heterogeneous else "fixed"
+        return (f"dp={self.dp} pp={self.pp} cp={self.cp} "
+                f"C={self.chunk_size} K={self.k} [{kind}] "
+                f"makespan={self.makespan:.0f} mem={self.memory_tokens}")
+
+
+@dataclasses.dataclass(frozen=True)
 class TuneResult:
     chunk_size: int
     k: int
     score: float                 # mean simulated makespan (lower = better)
-    table: dict                  # (chunk_size, k) -> score
+    table: dict                  # (chunk_size, k[, cp]) -> score
+    ranked: tuple = ()           # LaunchConfigs, best (lowest makespan) first
 
 
 def seq_time(tokens, overhead=2000.0):
@@ -52,7 +75,8 @@ def rotation_wave_sizes(chunks) -> list:
 
 def grid_search(batches, *, pp: int, memory_token_budget: int,
                 chunk_sizes=(2048, 4096, 8192, 16384, 32768),
-                ks=(1, 2, 4, 8, 16)):
+                ks=(1, 2, 4, 8, 16), world_size: int = None, cps=None,
+                include_heterogeneous: bool = False):
     """batches: list of {seq_id: length} dicts sampled from the real data
     distribution. memory_token_budget: max K*ChunkSize live activation
     tokens. Returns TuneResult; K is forced to 1 when pp == 1 (paper §5).
@@ -60,7 +84,26 @@ def grid_search(batches, *, pp: int, memory_token_budget: int,
     pp > 1 candidates are scored in ``simulate_rotation`` units — every
     rotation tick processes one capacity-padded ChunkSize slot, costed at
     ``seq_time(chunk_size)`` — matching `PipelineStats.makespan_units` from
-    the real executor tick for tick."""
+    the real executor tick for tick.
+
+    ``world_size`` switches to WORLD mode: candidates become full launch
+    configs over a world_size-device (data x pipe x seq) mesh. Each
+    (chunk_size, K, cp) is scored with `planner.fixed_waves` (the lockstep
+    wave makespan the executors realize, ring comm included) averaged over
+    the batches, with table keys (chunk_size, k, cp); ``cps`` restricts the
+    candidate cp degrees (default: every divisor of world_size // pp).
+    ``include_heterogeneous`` additionally scores, per (chunk_size, K), the
+    planner-SOLVED per-wave-cp plan over every mesh factorization
+    (`planner.solve_world`) and ranks it alongside — these appear only in
+    ``ranked`` (flagged ``heterogeneous``), not in the fixed-config table.
+    K is not forced to 1 here: waves of dependent chunks pass through the
+    Algorithm-2 recompute schedule where K > 1 trades memory for F2 ticks
+    even without pipelining. ``ranked`` lists every candidate best-first."""
+    if world_size is not None:
+        return _grid_search_world(
+            batches, pp=pp, memory_token_budget=memory_token_budget,
+            chunk_sizes=chunk_sizes, ks=ks, world_size=world_size, cps=cps,
+            include_heterogeneous=include_heterogeneous)
     if pp == 1:
         ks = (1,)
     table = {}
@@ -83,5 +126,63 @@ def grid_search(batches, *, pp: int, memory_token_budget: int,
                         unit=seq_time(cs)).makespan
             table[(cs, k)] = total / len(batches)
     best = min(table, key=table.get)
+    ranked = tuple(sorted(
+        (LaunchConfig(dp=1, pp=pp, cp=1, chunk_size=cs, k=k,
+                      makespan=score, memory_tokens=k * cs)
+         for (cs, k), score in table.items()),
+        key=lambda c: (c.makespan, c.chunk_size, c.k)))
     return TuneResult(chunk_size=best[0], k=best[1], score=table[best],
-                      table=table)
+                      table=table, ranked=ranked)
+
+
+def _grid_search_world(batches, *, pp: int, memory_token_budget: int,
+                       chunk_sizes, ks, world_size: int, cps,
+                       include_heterogeneous: bool):
+    """World-mode grid search body — see `grid_search`."""
+    from repro.core import dp_balance, planner
+
+    slots = world_size // max(pp, 1)
+    if cps is None:
+        cps = tuple(d for d in range(1, slots + 1) if slots % d == 0)
+    table, ranked = {}, []
+    for cs in chunk_sizes:
+        for k in ks:
+            if k * cs > memory_token_budget:
+                continue
+            batch_units = []
+            for lengths in batches:
+                g, s = group_chunks(construct_chunks(lengths, cs))
+                batch_units.append(dp_balance.units_from_chunks(
+                    g, s, k=k, static_shapes=True))
+            # per-device StateStore KV slots of the longest unit (its cap
+            # divides by cp on the ring) + the K*C live residual bound
+            cap_max = max((dp_balance.prefix_capacity(u.n_chunks, cs)
+                           for units in batch_units for u in units),
+                          default=0)
+            for cp in cps:
+                total = sum(planner.fixed_waves(
+                    units, world=slots, cp=cp, pp=pp, k=k, chunk_size=cs)[1]
+                    for units in batch_units)
+                score = total / len(batches)
+                table[(cs, k, cp)] = score
+                ranked.append(LaunchConfig(
+                    dp=slots // cp, pp=pp, cp=cp, chunk_size=cs, k=k,
+                    makespan=score,
+                    memory_tokens=k * cs + cap_max // cp))
+            if include_heterogeneous:
+                total, shape = 0.0, (slots, 1)
+                for units in batch_units:
+                    _, m, shape = planner.solve_world(
+                        units, world=world_size, pp=pp, k=k, chunk_size=cs)
+                    total += m
+                ranked.append(LaunchConfig(
+                    dp=shape[0], pp=pp, cp=shape[1], chunk_size=cs, k=k,
+                    makespan=total / len(batches),
+                    memory_tokens=k * cs + cap_max // max(shape[1], 1),
+                    heterogeneous=True))
+    ranked = tuple(sorted(
+        ranked, key=lambda c: (c.makespan, c.chunk_size, c.k, c.cp,
+                               c.heterogeneous)))
+    best = ranked[0]
+    return TuneResult(chunk_size=best.chunk_size, k=best.k,
+                      score=best.makespan, table=table, ranked=ranked)

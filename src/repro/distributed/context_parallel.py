@@ -125,16 +125,25 @@ def ring_wave(wave) -> bool:
     return any(u is not None and u.ring for u in wave)
 
 
-def run_batch_cp(cfg: ModelConfig, params, groups, standalone, mesh, *,
-                 k: int = 1, blockwise_threshold: int = 8192,
-                 plan_policy: str = "lpt", cp_threshold: int = 0):
-    """One training micro-iteration on a (data x seq) context-parallel mesh.
+def run_batch_cp(cfg: ModelConfig, params, batch, plan=None, mesh=None, *,
+                 k: int = None, blockwise_threshold: int = None,
+                 plan_policy: str = None, cp_threshold: int = None):
+    """One training micro-iteration on a (data x seq) context-parallel mesh,
+    driven by an ExecutionPlan: ``run_batch_cp(cfg, params,
+    (groups, standalone), plan)``. (The legacy ``(cfg, params, groups,
+    standalone, mesh, k=..., cp_threshold=...)`` signature still works
+    under DeprecationWarning — `chunked_step.coerce_plan`.)
 
-    Same wave orchestration as `chunked_step._run_batch_dp` (so DP x CP
-    composes for free: with dp == 1 every wave is a single unit and the
-    per-unit `cp_threshold` decision is exact); ring-eligible waves swap the
-    chunk fn for the shard_map ring trunk. Numerically equivalent to the
-    single-device `run_batch` to <=1e-5 (tests/test_context_parallel.py).
+    Same wave orchestration as the DP executor (`chunked_step
+    .run_planned_waves`); the plan decides per wave: cp > 1 waves swap the
+    chunk fn for the shard_map ring trunk (dp_size rows, tokens sharded
+    over "seq"), cp == 1 waves run the plain GSPMD chunk fn — under a
+    solved plan they are WIDENED to dp_size * seq_size rows over the
+    combined ("data", "seq") axes, so the would-be ring ranks each execute
+    their own unit and no ring hops are paid. Numerically equivalent to the
+    single-device `run_batch` to <=1e-5 (tests/test_context_parallel.py,
+    tests/test_planner.py) under any plan — gradients sum linearly and
+    dummy rows contribute zero, so the plan only moves performance.
     """
     if cfg.family != "dense":
         raise NotImplementedError(
@@ -142,26 +151,36 @@ def run_batch_cp(cfg: ModelConfig, params, groups, standalone, mesh, *,
             f"family={cfg.family!r}")
     from repro.core import chunked_step as cs
 
-    cp = sharding.seq_size(mesh)
+    groups, standalone, plan = cs.coerce_plan(
+        batch, plan, mesh, k=k, blockwise_threshold=blockwise_threshold,
+        plan_policy=plan_policy, cp_threshold=cp_threshold,
+        where="run_batch_cp")
+    mesh = plan.mesh
+    S = sharding.seq_size(mesh)
     scale = cs._batch_loss_scale(groups, standalone)
-    units = dp_balance.units_from_materialized(
-        groups, standalone, k=k, static_shapes=True, cp=cp,
-        cp_threshold=cp_threshold)
 
-    def _ring(wave, slots):
-        return ring_wave(wave) and slots[0]["tokens"].shape[1] % cp == 0
+    def eff_cp(wave, slots):
+        """Runtime geometry guard: the ring shards tokens, so C must divide
+        by cp (hand-built plans may violate it — fall back to packing)."""
+        cp = wave.cp
+        if cp > 1 and cp != S:
+            raise ValueError(f"wave cp={cp} != mesh seq size {S}: ring "
+                             "waves run at exactly the \"seq\" axis width")
+        return cp if cp > 1 and slots[0]["tokens"].shape[1] % cp == 0 else 1
 
     def chunk_fn_for_wave(wave, slots):
-        if _ring(wave, slots):
-            return _cp_chunk_fn(cfg, blockwise_threshold, mesh, cp)
+        cp = eff_cp(wave, slots)
+        if cp > 1:
+            return _cp_chunk_fn(cfg, plan.blockwise_threshold, mesh, cp)
         return None
 
     def wave_done(wave, slots, stats, n_fwd, n_bwd):
-        if _ring(wave, slots):
+        cp = eff_cp(wave, slots)
+        stats.wave_cps[-1] = cp
+        if cp > 1:
             stats.ring_steps += dp_balance.ring_hops(n_fwd, n_bwd, cp,
                                                      cfg.num_layers)
 
     return cs.run_planned_waves(
-        cfg, params, units, mesh, k=k, scale=scale,
-        blockwise_threshold=blockwise_threshold, plan_policy=plan_policy,
+        cfg, params, plan, scale=scale,
         chunk_fn_for_wave=chunk_fn_for_wave, wave_done=wave_done)

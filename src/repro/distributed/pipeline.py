@@ -235,6 +235,7 @@ class PipelineStats:
     backward_calls: int = 0
     max_live_residuals: int = 0        # live residual chunk-states (<= K)
     ring_steps: int = 0                # context-parallel ppermute hops
+    wave_cps: list = dataclasses.field(default_factory=list)  # effective cp
     # tick accounting, in simulate_rotation units (F tick = 1, B tick = 2)
     makespan_units: float = 0.0
     useful_units: float = 0.0          # F + B work summed across stages
@@ -260,7 +261,8 @@ def _windows_slab(cfg: ModelConfig, n_stages: int):
 
 @functools.lru_cache(maxsize=None)
 def _window_step_fn(cfg: ModelConfig, mesh, n_stages: int,
-                    blockwise_threshold: int, axis: str, cp: int = 1):
+                    blockwise_threshold: int, axis: str, cp: int = 1,
+                    wide: bool = False):
     """Jitted loss/state fn for ONE rotation window: (params, kv, batch) ->
     (loss, kv_out). Compiles once per (window, capacity, rows) shape.
 
@@ -270,6 +272,12 @@ def _window_step_fn(cfg: ModelConfig, mesh, n_stages: int,
     over "seq" then written by the rank whose StateStore shard owns its
     slot (the write region [off, off+C) lies inside one shard — waves where
     it wouldn't, cap/cp % C != 0, fall back to cp=1 seq-replication).
+
+    ``wide`` is the planner's packed cp=1 mode on a mesh that HAS a "seq"
+    axis: the wave was widened to dp * seq rows, so the row dim shards over
+    the combined ("data", "seq") axes — the would-be ring ranks each run
+    their own unit, tokens stay whole, no ring hops. (cp > 1 and wide are
+    mutually exclusive.)
     """
     win_np = _windows_slab(cfg, n_stages)
 
@@ -347,10 +355,16 @@ def _window_step_fn(cfg: ModelConfig, mesh, n_stages: int,
         windows = jnp.asarray(win_np)
         x_mbs = params["embed"][batch["tokens"]]
         # "seq" shards every token dim (x/pos/seg dim 2, K/V capacity dim 2)
-        # when cp > 1; unmentioned with cp == 1 (replicated — bit-identical
-        # to the 2D executor).
-        tok = (P(None, "data", "seq") if cp > 1 else P(None, "data"))
-        kvs = (P(axis, "data", "seq") if cp > 1 else P(axis, "data"))
+        # when cp > 1; in wide mode it joins the ROW sharding instead; with
+        # neither it is unmentioned (replicated — bit-identical to the 2D
+        # executor).
+        if cp > 1:
+            tok, kvs = P(None, "data", "seq"), P(axis, "data", "seq")
+        elif wide:
+            tok = P(None, ("data", "seq"))
+            kvs = P(axis, ("data", "seq"))
+        else:
+            tok, kvs = P(None, "data"), P(axis, "data")
         outs, kv_out = shard_map(
             body, mesh=mesh,
             in_specs=(P(axis), P(axis), kvs, tok, tok, tok, tok, tok,
@@ -379,7 +393,7 @@ def _tree_bytes(tree) -> int:
 def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
                         mesh, n_stages: int, loss_scale: float, grads,
                         stats: PipelineStats, blockwise_threshold: int,
-                        axis: str = "pipe", cp: int = 1):
+                        axis: str = "pipe", cp: int = 1, wide: bool = False):
     """Algorithm 2 over one lockstep wave of chunk slots, pipelined.
 
     slots: list of (R, C) stacked chunk batches (one row per DP rank, dummy
@@ -389,7 +403,8 @@ def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
 
     cp > 1: this wave rides the "seq" ring — the caller has already checked
     eligibility (C % cp == 0 and the per-rank StateStore shard holds whole
-    chunk slots, cap/cp % C == 0).
+    chunk slots, cap/cp % C == 0). wide: packed cp=1 wave widened to
+    dp * seq rows over the combined ("data", "seq") axes.
     """
     from repro.core import chunked_step as cs
     from repro.core.schedule_sim import rotation_windows
@@ -408,8 +423,13 @@ def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
         meta = cs._prefix_meta_write(meta, b, cfg, i * C)
         metas.append(meta)
 
-    kv_sharding = NamedSharding(
-        mesh, P(axis, "data", "seq") if cp > 1 else P(axis, "data"))
+    if cp > 1:
+        kv_spec = P(axis, "data", "seq")
+    elif wide:
+        kv_spec = P(axis, ("data", "seq"))
+    else:
+        kv_spec = P(axis, "data")
+    kv_sharding = NamedSharding(mesh, kv_spec)
     kv = jax.device_put(
         {"k": jnp.zeros((cfg.num_layers, R, cap, cfg.padded_num_kv_heads,
                          hd), dtype),
@@ -420,7 +440,7 @@ def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
     stats.wave_sizes.append(n)
     stats.kv_capacity_slots.append(cap // C if C else 0)
 
-    f = _window_step_fn(cfg, mesh, S, blockwise_threshold, axis, cp)
+    f = _window_step_fn(cfg, mesh, S, blockwise_threshold, axis, cp, wide)
     scale = jnp.asarray(loss_scale, jnp.float32)
 
     def window_batch(g0, g1):
@@ -495,61 +515,71 @@ def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
     return total_loss, grads
 
 
-def run_batch_pipelined(cfg: ModelConfig, params, groups, standalone,
-                        mesh, *, k: int = 1, blockwise_threshold: int = 8192,
-                        plan_policy: str = "lpt", axis: str = "pipe",
-                        cp_threshold: int = 0):
-    """One training micro-iteration on a (data x pipe [x seq]) mesh.
+def run_batch_pipelined(cfg: ModelConfig, params, batch, plan=None,
+                        mesh=None, *, k: int = None,
+                        blockwise_threshold: int = None,
+                        plan_policy: str = None, axis: str = "pipe",
+                        cp_threshold: int = None):
+    """One training micro-iteration on a (data x pipe [x seq]) mesh, driven
+    by an ExecutionPlan: ``run_batch_pipelined(cfg, params,
+    (groups, standalone), plan)``. (The legacy ``(cfg, params, groups,
+    standalone, mesh, k=..., ...)`` signature still works under
+    DeprecationWarning — `chunked_step.coerce_plan`.)
 
-    The dp_balance planner assigns dependent groups / packed standalone
-    chunks to DP ranks (token-work LPT, largest-first stream order so big
-    units align across ranks and across waves — that alignment is what keeps
-    the lockstep rotation's dummy-padding, and therefore its bubble,
-    minimal). Each wave's slots are stacked (R, C) batches sharded over
-    ``data``; the rotation pipelines them over ``pipe`` with the K-retention
-    schedule. Numerically equivalent to the single-device ``run_batch``
-    (tests/test_pipeline2d.py: <=1e-5, including K < N recompute).
+    The plan's waves are stacked (R, C) slot batches; the rotation
+    pipelines each wave's chunk stream over ``pipe`` with the K-retention
+    schedule (windows of at most K slots per scan, earlier windows F2-
+    recomputed right before their backward). Numerically equivalent to the
+    single-device ``run_batch`` (tests/test_pipeline2d.py: <=1e-5,
+    including K < N recompute) under ANY plan.
 
-    With a "seq" axis, ring-eligible waves (see `dp_balance.cp_eligible` and
-    ``cp_threshold``) additionally shard chunk tokens and the per-stage
-    StateStore capacity over "seq" — context parallelism composed INSIDE the
-    rotation's shard_map. Waves whose per-rank StateStore shard would split
-    a chunk slot (cap/cp not a multiple of C) fall back to seq-replication.
+    Per-wave cp routing on a mesh with a "seq" axis: cp > 1 waves shard
+    chunk tokens and the per-stage StateStore capacity over "seq" —
+    context parallelism composed INSIDE the rotation's shard_map; cp=1
+    waves widened by the solver to dp * seq slots shard ROWS over the
+    combined ("data", "seq") axes instead (no ring hops). Waves whose
+    per-rank StateStore shard would split a chunk slot (cap/cp not a
+    multiple of C) fall back to seq-replication.
     """
     if cfg.family != "dense":
         raise NotImplementedError(
             "pipeline executor supports stacked dense decoders; "
             f"family={cfg.family!r} (split_stages needs a uniform layer slab)")
+    from repro.core import chunked_step as cs
+
+    groups, standalone, plan = cs.coerce_plan(
+        batch, plan, mesh, k=k, blockwise_threshold=blockwise_threshold,
+        plan_policy=plan_policy, cp_threshold=cp_threshold,
+        where="run_batch_pipelined")
+    mesh = plan.mesh
     S = sharding.pipe_size(mesh)
     if cfg.num_layers % S:
         raise ValueError(f"num_layers={cfg.num_layers} not divisible by "
                          f"pipe={S}")
-    from repro.core import chunked_step as cs
-    from repro.distributed.context_parallel import ring_wave
-
-    R = sharding.dp_size(mesh)
-    cp = sharding.seq_size(mesh)
+    D = sharding.dp_size(mesh)
+    seq = sharding.seq_size(mesh)
     scale = cs._batch_loss_scale(groups, standalone)
-    units = dp_balance.units_from_materialized(
-        groups, standalone, k=k, static_shapes=True, cp=cp,
-        cp_threshold=cp_threshold)
-    plan = dp_balance.plan_assignment(units, R, policy=plan_policy)
-    waves, _ = dp_balance.wave_schedule(plan)
 
     params = sharding.pipeline_put(mesh, params)
     grads, total_loss = None, 0.0
     stats = PipelineStats(n_stages=S)
-    for wave in waves:
-        slots = cs.stack_wave_slots(cfg, wave, mesh)
+    for wave in plan.waves:
+        cp = wave.cp
+        if cp > 1 and cp != seq:
+            raise ValueError(f"wave cp={cp} != mesh seq size {seq}: ring "
+                             "waves run at exactly the \"seq\" axis width")
+        slots = cs.stack_wave_slots(cfg, wave.slots, mesh, cp=cp)
         n = len(slots)
-        C = slots[0]["tokens"].shape[1]
+        R, C = slots[0]["tokens"].shape
         cap = ss.prefix_capacity(n, C)
-        ring = (cp > 1 and ring_wave(wave) and C % cp == 0
+        ring = (cp > 1 and C % cp == 0
                 and (cap == 0 or (cap // cp) % C == 0))
+        wide = (cp == 1 and seq > 1 and R % (D * seq) == 0)
+        stats.wave_cps.append(cp if ring else 1)
         l, grads = _run_wave_pipelined(
-            cfg, params, slots, k=k, mesh=mesh, n_stages=S,
+            cfg, params, slots, k=plan.k, mesh=mesh, n_stages=S,
             loss_scale=scale, grads=grads, stats=stats,
-            blockwise_threshold=blockwise_threshold, axis=axis,
-            cp=(cp if ring else 1))
+            blockwise_threshold=plan.blockwise_threshold, axis=axis,
+            cp=(cp if ring else 1), wide=wide)
         total_loss = total_loss + l
     return total_loss, grads, stats

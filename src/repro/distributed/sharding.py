@@ -238,6 +238,51 @@ def dp_put(cfg: ModelConfig, batch, mesh):
         batch, specs)
 
 
+def wave_specs(cfg: ModelConfig, batch_shape, mesh, cp: int):
+    """PartitionSpecs for ONE planned wave's (R, C) stacked chunk batch, at
+    the wave's own context-parallel degree (ExecutionPlan.waves[i].cp):
+
+      * cp > 1 (ring wave): rows over the DP axes, token dim (dim 1) over
+        "seq" — each CP rank holds its token shard, K/V will circulate as
+        the ppermute ring. R == dp_size rows.
+      * cp == 1 on a mesh WITH a "seq" axis (packed wave): rows over the
+        combined (data..., "seq") axes — the planner widened the wave to
+        dp_size * seq_size slots so the would-be ring ranks each run their
+        own unit instead; tokens stay whole and no ring hops are paid.
+      * cp == 1, no "seq" axis: plain DP row sharding (== `batch_specs`).
+
+    Rows that don't divide the target axes replicate (the planner always
+    emits exact widths; this is belt-and-suspenders for hand-built plans).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    seq = sizes.get("seq", 1)
+    row_axes = dp_axes(mesh)
+    if cp <= 1 and seq > 1:
+        row_axes = tuple(row_axes) + ("seq",)
+    total_rows = int(np.prod([sizes[a] for a in row_axes]))
+
+    def leaf(path, x):
+        name = getattr(path[-1], "key", None)
+        if name in ("loss_scale",) or x.ndim == 0:
+            return P()
+        first = row_axes if _div(x.shape[0], total_rows) else None
+        rest = [None] * (x.ndim - 1)
+        if cp > 1 and x.ndim >= 2 and _div(x.shape[1], seq):
+            rest[0] = "seq"
+        return P(first, *rest)
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_shape)
+
+
+def wave_put(cfg: ModelConfig, batch, mesh, cp: int):
+    """Place one wave's stacked chunk batch per `wave_specs` — the
+    ExecutionPlan's per-wave cp decision made physical."""
+    specs = wave_specs(cfg, batch, mesh, cp)
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+        batch, specs)
+
+
 def batch_specs(cfg: ModelConfig, batch_shape, mesh):
     """Batch dims over DP; with a context-parallel "seq" axis the token dim
     (dim 1 of every (B, C[, ...]) chunk array) additionally shards over it,

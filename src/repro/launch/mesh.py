@@ -44,3 +44,13 @@ def make_train_mesh(data: int = 1, pipe: int = 1, seq: int = 1):
     if pipe <= 1:
         return make_data_mesh(data)
     return jax.make_mesh((data, pipe), ("data", "pipe"))
+
+
+def mesh_for_config(config):
+    """Mesh for a tuner pick — a `tuning.LaunchConfig` (or anything with
+    .dp/.pp/.cp) -> the matching train mesh, or None for the trivial
+    1x1x1 config (single-device path, no mesh placement)."""
+    dp, pp, cp = config.dp, config.pp, config.cp
+    if dp * pp * cp <= 1:
+        return None
+    return make_train_mesh(dp, pp, cp)

@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_arch
-from repro.core import chunked_step, chunking
+from repro.core import chunked_step, chunking, planner, tuning
 from repro.data.prefetch import Prefetcher, synchronous
 from repro.data.synthetic import LongTailSampler, PAPER_EVAL_CDF
 from repro.distributed import sharding
@@ -69,7 +69,7 @@ def _to_device(gb, sb):
 def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
           max_len: int = 2048, log_every: int = 1, checkpoint_path=None,
           sampler=None, mesh=None, prefetch_depth: int = 2,
-          plan_policy: str = "lpt", cp_threshold: int = 0,
+          plan_policy: str = "solve", cp_threshold: int = 0,
           resume_path=None):
     params = api.init_params(cfg, jax.random.PRNGKey(tc.seed),
                              max_seq=max_len + 8)
@@ -125,15 +125,18 @@ def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
         for off, (gb_h, sb_h, chunks) in enumerate(stream):
             step = start_step + off
             t0 = time.time()
-            # DP path consumes host batches directly: the planner reads token
-            # counts without device round-trips, and dp_put transfers each
-            # stacked wave slot straight to its sharded layout (no staging
-            # copy on the default device)
+            # Mesh paths consume host batches directly: the planner reads
+            # token counts without device round-trips, and wave_put transfers
+            # each stacked wave slot straight to its sharded layout (no
+            # staging copy on the default device)
             gb, sb = (gb_h, sb_h) if (dp > 1 or pp > 1 or cp > 1) \
                 else _to_device(gb_h, sb_h)
+            plan = (planner.plan_batch(gb, sb, mesh, k=tc.k_chunks,
+                                       policy=plan_policy,
+                                       cp_threshold=cp_threshold)
+                    if mesh is not None else None)
             loss, grads, stats = chunked_step.run_batch(
-                cfg, params, gb, sb, k=tc.k_chunks, mesh=mesh,
-                plan_policy=plan_policy, cp_threshold=cp_threshold)
+                cfg, params, (gb, sb), plan)
             lr = adamw.cosine_schedule(step, base_lr=tc.learning_rate,
                                        warmup_steps=tc.warmup_steps,
                                        total_steps=tc.total_steps)
@@ -211,9 +214,27 @@ def main(argv=None):
                          "stream is replayed to the restored step)")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="host-side prefetch depth (0 = synchronous)")
-    ap.add_argument("--plan", default="lpt",
-                    choices=("lpt", "round_robin"),
-                    help="DP chunk-group assignment policy")
+    ap.add_argument("--plan", default="solve",
+                    choices=("solve", "lpt", "round_robin"),
+                    help="wave planning policy: 'solve' = heterogeneous "
+                         "per-wave cp planner (core/planner.py); "
+                         "'lpt'/'round_robin' = fixed global cp with the "
+                         "legacy dp_balance assignment")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the launch-config grid search (tuning"
+                         ".grid_search over dp*pp*cp devices, heterogeneous "
+                         "plans included), print the ranked table and exit")
+    ap.add_argument("--tune-launch", action="store_true",
+                    help="after --tune, launch training with the top-ranked "
+                         "config (its mesh/C/K override the CLI values)")
+    ap.add_argument("--tune-budget", type=int, default=32768,
+                    help="K*ChunkSize live-activation token budget for "
+                         "--tune candidates")
+    ap.add_argument("--tune-chunk-sizes", default=None,
+                    help="comma-separated ChunkSize candidates for --tune "
+                         "(default: the grid_search defaults)")
+    ap.add_argument("--tune-ks", default=None,
+                    help="comma-separated K candidates for --tune")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -221,6 +242,21 @@ def main(argv=None):
         cfg = cfg.reduced()
     tc = TrainConfig(chunk_size=args.chunk_size, k_chunks=args.k,
                      learning_rate=args.lr, total_steps=args.steps)
+
+    if args.tune or args.tune_launch:
+        top = _tune(args, cfg, tc)
+        if not args.tune_launch:
+            return
+        tc = TrainConfig(chunk_size=top.chunk_size, k_chunks=top.k,
+                         learning_rate=args.lr, total_steps=args.steps)
+        mesh = mesh_lib.mesh_for_config(top)
+        print(f"launching top config: {top.describe()}")
+        train(cfg, tc, batch_per_step=args.batch, max_len=args.max_len,
+              checkpoint_path=args.checkpoint, mesh=mesh,
+              prefetch_depth=args.prefetch, plan_policy="solve",
+              resume_path=args.resume)
+        return
+
     if args.cp > 1 and args.chunk_size % args.cp:
         raise SystemExit(f"--chunk-size {args.chunk_size} must divide by "
                          f"--cp {args.cp}")
@@ -234,6 +270,40 @@ def main(argv=None):
           checkpoint_path=args.checkpoint, mesh=mesh,
           prefetch_depth=args.prefetch, plan_policy=args.plan,
           cp_threshold=args.cp_threshold, resume_path=args.resume)
+
+
+def _tune(args, cfg, tc):
+    """--tune: grid-search full launch configs (fixed AND solved
+    heterogeneous) on sampled long-tail batches, print the ranked table,
+    return the top LaunchConfig."""
+    world = args.dp * args.pp * args.cp
+    if world <= 1:
+        world = max(1, len(jax.devices()))
+    sampler = LongTailSampler(PAPER_EVAL_CDF, min_len=32, seed=tc.seed,
+                              max_len=args.max_len)
+    batches = []
+    for _ in range(4):
+        _, lengths = sampler.sample_batch(args.batch, cfg.vocab_size)
+        batches.append(lengths)
+    csv_int = lambda s: tuple(int(x) for x in s.split(",") if x)
+    kw = {}
+    if args.tune_chunk_sizes:
+        kw["chunk_sizes"] = csv_int(args.tune_chunk_sizes)
+    if args.tune_ks:
+        kw["ks"] = csv_int(args.tune_ks)
+    r = tuning.grid_search(batches, pp=args.pp,
+                           memory_token_budget=args.tune_budget,
+                           world_size=world, include_heterogeneous=True,
+                           **kw)
+    print(f"tune: world={world} budget={args.tune_budget} "
+          f"candidates={len(r.ranked)}")
+    print(f"{'rank':>4} {'dp':>3} {'pp':>3} {'cp':>3} {'C':>6} {'K':>3} "
+          f"{'plan':>6} {'makespan':>12} {'mem_tokens':>10}")
+    for i, c in enumerate(r.ranked):
+        print(f"{i:>4} {c.dp:>3} {c.pp:>3} {c.cp:>3} {c.chunk_size:>6} "
+              f"{c.k:>3} {'solve' if c.heterogeneous else 'fixed':>6} "
+              f"{c.makespan:>12.0f} {c.memory_tokens:>10}")
+    return r.ranked[0]
 
 
 if __name__ == "__main__":
