@@ -107,6 +107,19 @@ def check_file(name: str, current_dir: str, baseline_dir: str,
     return failures, rows
 
 
+def orphan_benchmarks(current_dir: str) -> list:
+    """BENCH_*.json files in --current that the GATED registry doesn't know:
+    a benchmark someone added (or renamed) without wiring it into the gate
+    and committing a baseline. Under --require-all these FAIL the build —
+    otherwise the new benchmark would upload artifacts forever while its
+    regressions go unwatched."""
+    if not os.path.isdir(current_dir):
+        return []
+    return sorted(f for f in os.listdir(current_dir)
+                  if f.startswith("BENCH_") and f.endswith(".json")
+                  and f not in GATED)
+
+
 def report_only(name: str, current_dir: str, baseline_dir: str):
     """Print walltime-ish scalars side by side, informational."""
     cur_path = os.path.join(current_dir, name)
@@ -156,7 +169,7 @@ def main(argv=None) -> int:
 
     if args.update:
         os.makedirs(args.baseline, exist_ok=True)
-        for name in GATED:
+        for name in list(GATED) + orphan_benchmarks(args.current):
             src = os.path.join(args.current, name)
             if os.path.exists(src):
                 shutil.copy(src, os.path.join(args.baseline, name))
@@ -171,6 +184,16 @@ def main(argv=None) -> int:
             print(f"  [gate] {metric}: {bval:.6g} -> {cval:.6g} [{status}]")
         report_only(name, args.current, args.baseline)
         all_failures += failures
+    for name in orphan_benchmarks(args.current):
+        if args.require_all:
+            all_failures.append(
+                f"{name}: produced in --current {args.current} but not in "
+                "the GATED registry / no committed baseline — register it "
+                "in benchmarks/check_regression.py, then run with --update "
+                "and commit it")
+        else:
+            print(f"  [orphan] {name}: not in GATED registry (would fail "
+                  "under --require-all)")
     if all_failures:
         print("\nPERF REGRESSION GATE FAILED:", file=sys.stderr)
         for msg in all_failures:

@@ -13,14 +13,22 @@ walltime), so every scalar under ``gate`` is CI-gated by check_regression:
   * peak per-device K/V bytes vs cp: the StateStore capacity shard
     (cap/cp slots per rank, model geometry of granite-3-8b) plus the
     circulating ring shard — the 1/cp scaling that removes the one-device
-    ChunkSize cap.
+    ChunkSize cap;
+  * ring overlap: hops whose ppermute is issued concurrently with the
+    previous hop's attention kernel (`dp_balance.overlapped_ring_hops`,
+    exactly the executors' ``stats.overlapped_hops``) and the cost model's
+    exposed comm units for the paper-CDF tail group
+    (`planner.ring_comm_cost(..., overlap=True)`);
+  * host-offloaded StateStore: per-device *resident* store bytes for the
+    tail group with cold prefix buckets in pinned host memory
+    (`planner.statestore_device_bytes`) vs keeping every version on device.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.core import dp_balance
+from repro.core import dp_balance, planner
 from repro.core.chunking import construct_chunks, group_chunks
 from repro.data.synthetic import LongTailSampler, PAPER_EVAL_CDF
 
@@ -65,12 +73,34 @@ def run():
           f"longest group = {longest} chunks")
     print("cp,ring_steps,imbalance_all_ring,imbalance_thresholded,"
           "kv_bytes_per_device_longest")
+    hd = cfg.resolved_head_dim
+    per_tok = 2 * cfg.padded_num_kv_heads * hd * 2           # k+v, bf16
     for cp in CPS:
         units = _batch_units(cp, 0)
         ring_steps = sum(
             dp_balance.ring_step_count(u.n_chunks, cp, k=K,
                                        n_layers=cfg.num_layers)
             for u in units if u.ring)
+        # hops the double-buffered ring issues concurrently with the
+        # previous hop's kernel (the executors' stats.overlapped_hops)
+        overlapped = sum(
+            dp_balance.overlapped_ring_hops(
+                u.n_chunks + max(u.n_chunks - K, 0), u.n_chunks, cp,
+                n_layers=cfg.num_layers)
+            for u in units if u.ring)
+        # cost-model comm that stays EXPOSED for the tail group once the
+        # overlap hides hop latency behind the kernel
+        comm_serial = planner.ring_comm_cost(longest, CHUNK_SIZE, cp, k=K)
+        comm_exposed = planner.ring_comm_cost(longest, CHUNK_SIZE, cp, k=K,
+                                              overlap=True)
+        # per-device store residency for the tail group: every prefix
+        # version on device vs cold buckets offloaded to pinned host memory
+        store_resident = planner.statestore_device_bytes(
+            longest, CHUNK_SIZE, cp, n_layers=cfg.num_layers,
+            bytes_per_token=per_tok, k=K)
+        store_offload = planner.statestore_device_bytes(
+            longest, CHUNK_SIZE, cp, n_layers=cfg.num_layers,
+            bytes_per_token=per_tok, k=K, offload=True)
         # planner balance on a (dp=4) x cp mesh, all units on the ring vs
         # only long-tail units (cp_threshold)
         imb_all = dp_balance.plan_assignment(units, 4).imbalance
@@ -78,6 +108,11 @@ def run():
         imb_thr = dp_balance.plan_assignment(units_thr, 4).imbalance
         kvb = kv_bytes_per_device(cfg, longest, cp)
         rows.append({"cp": cp, "ring_steps": ring_steps,
+                     "overlapped_hops": overlapped,
+                     "exposed_comm_cost": round(comm_exposed, 3),
+                     "serial_comm_cost": round(comm_serial, 3),
+                     "statestore_resident_bytes": int(store_resident),
+                     "statestore_offload_bytes": int(store_offload),
                      "imbalance_all_ring": imb_all,
                      "imbalance_thresholded": imb_thr,
                      "kv_bytes_per_device_longest_group": kvb,
@@ -87,10 +122,22 @@ def run():
         gate[f"ring_steps_cp{cp}"] = ring_steps
         gate[f"imbalance_thresholded_cp{cp}"] = round(imb_thr, 6)
         gate[f"kv_bytes_per_device_cp{cp}"] = kvb
+        gate[f"overlapped_hops_serial_remainder_cp{cp}"] = \
+            ring_steps - overlapped
+        gate[f"exposed_comm_cost_cp{cp}"] = round(comm_exposed, 3)
+        gate[f"statestore_offload_bytes_cp{cp}"] = int(store_offload)
 
     # the point of the axis: per-device K/V scales ~1/cp
     assert rows[-1]["kv_bytes_per_device_longest_group"] * (CPS[-1] // 2) \
         < rows[0]["kv_bytes_per_device_longest_group"]
+    # overlap hides most hops and never inflates cost; offload drops
+    # residency by ~(n+1)/(k+2) on the 74-chunk tail group
+    for r in rows:
+        if r["cp"] > 1:
+            assert 0 < r["overlapped_hops"] < r["ring_steps"]
+            assert r["exposed_comm_cost"] <= r["serial_comm_cost"]
+            assert r["statestore_offload_bytes"] * 4 \
+                < r["statestore_resident_bytes"]
     return {
         "config": {"arch": cfg.name, "chunk_size": CHUNK_SIZE,
                    "global_batch": GLOBAL_BATCH, "k": K, "seed": SEED,
@@ -98,8 +145,14 @@ def run():
         "rows": rows,
         "gate": gate,
         "note": "all metrics are deterministic planner/geometry math "
-                "(gated in CI); ring_steps matches the executors' "
-                "stats.ring_steps accounting",
+                "(gated in CI); ring_steps / overlapped_hops match the "
+                "executors' stats accounting; the gate carries the "
+                "serial REMAINDER (ring_steps - overlapped_hops) so that "
+                "'higher is worse' holds; statestore bytes are the "
+                "planner.statestore_device_bytes model for the 74-chunk "
+                "tail group (resident = every prefix version on device, "
+                "offload = latest + K captured + 1 in-flight + prefetch "
+                "window)",
     }
 
 

@@ -53,9 +53,19 @@ class SchedulerStats:
     backward_calls: int = 0
     max_live_residuals: int = 0
     ring_steps: int = 0       # context-parallel ppermute hops (0 without CP)
+    # of ring_steps, the hops the double-buffered ring issues under a flash
+    # kernel (dp_balance.overlapped_ring_hops; 0 when overlap is off)
+    overlapped_hops: int = 0
     # per-wave cp actually executed ([] on the single-device path) — the
     # ExecutionPlan's heterogeneity made observable
     wave_cps: list = dataclasses.field(default_factory=list)
+    # StateStore residency (statestore.PrefixStore accounting): peak
+    # store-held device bytes, peak host-mirrored bytes, and host->device
+    # bucket transfers issued (all 0 when offload is off and the store
+    # keeps every version on device)
+    resident_statestore_bytes: int = 0
+    offloaded_statestore_bytes: int = 0
+    statestore_prefetches: int = 0
 
 
 # ---------------------------------------------------------- chunk fn --------
@@ -120,7 +130,8 @@ def _prefix_meta_write(meta, batch, cfg, offset: int):
 def run_group(cfg: ModelConfig, params, chunk_batches, *, k: int = 1,
               loss_scale: float = 1.0, grads=None,
               blockwise_threshold: int = 8192, stats: SchedulerStats = None,
-              chunk_fn=None):
+              chunk_fn=None, offload_statestore: bool = False,
+              prefetch_depth: int = 2):
     """Run Algorithm 2 over one dependent-chunk group (or a singleton
     standalone chunk). Returns (total_loss, grads, stats).
 
@@ -132,7 +143,13 @@ def run_group(cfg: ModelConfig, params, chunk_batches, *, k: int = 1,
     chunk_fn: optional (params, prefix, batch) -> (loss, own) override —
     the context-parallel executor swaps in its shard_map ring trunk here;
     the Algorithm-2 schedule, StateStore threading and cotangent routing
-    stay identical."""
+    stay identical.
+
+    offload_statestore: host-offload cold prefix versions through
+    `ss.PrefixStore` — the access schedule handed to the store is derived
+    from the very `alg2_schedule` this loop walks, so prefetches land
+    exactly when the F2 re-reads need them (`prefetch_depth` buckets
+    in flight). Exactness is unchanged (tests pin <=1e-5 vs. off)."""
     stats = stats or SchedulerStats()
     f = chunk_fn or _jitted_chunk_fn(cfg, blockwise_threshold)
     n = len(chunk_batches)
@@ -142,7 +159,11 @@ def run_group(cfg: ModelConfig, params, chunk_batches, *, k: int = 1,
     cap = ss.prefix_capacity(n, C)
     prefix = ss.alloc_prefix(cfg, B, cap, jnp.dtype(cfg.dtype))
     meta = _prefix_meta_init(B, cap)
-    prefixes, metas = [prefix], [meta]       # the StateStore (holds all K/V)
+    sched = alg2_schedule(n, k)
+    access = [e[1] for e in sched if e[0] in ("F", "F2")]
+    store = ss.PrefixStore(cfg, prefix, n, C, k, offload=offload_statestore,
+                           prefetch_depth=prefetch_depth, schedule=access)
+    metas = [meta]                 # int pos/seg versions (tiny next to K/V)
     for i, batch in enumerate(chunk_batches[:-1]):
         meta = _prefix_meta_write(meta, batch, cfg, i * C)
         metas.append(meta)
@@ -153,13 +174,14 @@ def run_group(cfg: ModelConfig, params, chunk_batches, *, k: int = 1,
 
     def fwd(i, keep):
         batch = chunk_batch_with_prefix(chunk_batches[i], metas[i])
+        pre = store.get(i)
         if keep:
             (loss, own), vjp_fn = jax.vjp(
-                lambda p, pre: f(p, pre, batch), params, prefixes[i])
+                lambda p, q: f(p, q, batch), params, pre)
             vjps[i] = vjp_fn
             stats.max_live_residuals = max(stats.max_live_residuals, len(vjps))
         else:
-            loss, own = f(params, prefixes[i], batch)
+            loss, own = f(params, pre, batch)
         owns[i] = own
         return loss, own
 
@@ -176,16 +198,13 @@ def run_group(cfg: ModelConfig, params, chunk_batches, *, k: int = 1,
         stats.backward_calls += 1
         return grads
 
-    for ev in alg2_schedule(n, k):
+    for ev in sched:
         if ev[0] == "F":
             _, i, keep = ev
             loss, own = fwd(i, keep)
             if i + 1 < n:       # the last chunk's own K/V has no reader
-                nxt = ss.write_own(cfg, prefixes[i], own, i * C)
-                if len(prefixes) <= i + 1:
-                    prefixes.append(nxt)
-                else:
-                    prefixes[i + 1] = nxt
+                store.put(i + 1, ss.write_own(cfg, store.get(i), own, i * C),
+                          own)
             total_loss = total_loss + loss * loss_scale
             stats.forward_calls += 1
         elif ev[0] == "F2":
@@ -194,9 +213,15 @@ def run_group(cfg: ModelConfig, params, chunk_batches, *, k: int = 1,
             stats.recompute_calls += 1
         else:
             _, i = ev
+            store.drop_device()   # ascending sweep over; closures own theirs
             grads = bwd(i, grads)
 
     assert not vjps and all(v is None for v in pending.values())
+    stats.resident_statestore_bytes = max(stats.resident_statestore_bytes,
+                                          store.stats.device_bytes_peak)
+    stats.offloaded_statestore_bytes = max(stats.offloaded_statestore_bytes,
+                                           store.stats.host_bytes)
+    stats.statestore_prefetches += store.stats.prefetches
     return total_loss, grads, stats
 
 
@@ -312,12 +337,16 @@ def run_batch(cfg: ModelConfig, params, batch, plan: ExecutionPlan = None,
     for g in groups:
         l, grads, stats = run_group(cfg, params, g, k=plan.k,
                                     loss_scale=scale, grads=grads,
-                                    stats=stats, blockwise_threshold=bt)
+                                    stats=stats, blockwise_threshold=bt,
+                                    offload_statestore=plan.offload_statestore,
+                                    prefetch_depth=plan.prefetch_depth)
         loss += l
     for c in standalone:
         l, grads, stats = run_group(cfg, params, [c], k=plan.k,
                                     loss_scale=scale, grads=grads,
-                                    stats=stats, blockwise_threshold=bt)
+                                    stats=stats, blockwise_threshold=bt,
+                                    offload_statestore=plan.offload_statestore,
+                                    prefetch_depth=plan.prefetch_depth)
         loss += l
     return loss, grads, stats
 
@@ -387,7 +416,8 @@ def run_planned_waves(cfg: ModelConfig, params, plan: ExecutionPlan, *,
         l, grads, stats = run_group(
             cfg, params_r, slots, k=plan.k, loss_scale=scale, grads=grads,
             stats=stats, blockwise_threshold=plan.blockwise_threshold,
-            chunk_fn=fn)
+            chunk_fn=fn, offload_statestore=plan.offload_statestore,
+            prefetch_depth=plan.prefetch_depth)
         stats.wave_cps.append(wave.cp)
         if wave_done is not None:
             wave_done(wave, slots, stats,

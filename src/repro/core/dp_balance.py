@@ -128,6 +128,44 @@ def ring_step_count(n_chunks: int, cp: int, k: int = 1,
     return ring_hops(n + rec, n, cp, n_layers)
 
 
+def overlapped_ring_hops(n_fwd: int, n_bwd: int, cp: int,
+                         n_layers: int = 1) -> int:
+    """Of `ring_hops`, the hops the double-buffered ring issues BEFORE the
+    kernel that hides them: the cp-1 K/V prefetch rotations of every forward
+    and every backward. The remaining ``n_layers * n_bwd`` hops (the dk/dv
+    accumulator's final hop home per backward) consume the hop's kernel
+    output and stay exposed to dataflow. The executors report this in
+    ``stats.overlapped_hops`` when the plan runs with ring overlap on."""
+    if cp <= 1:
+        return 0
+    return n_layers * (cp - 1) * (n_fwd + n_bwd)
+
+
+# Fixed per-ppermute-hop latency (token units — a blocking neighbor
+# collective costs the equivalent of ~512 tokens of trunk compute) and the
+# bandwidth cost of moving one K/V token around the ring. ONE home for these
+# constants: `ring_comm_cost` below is the canonical serial comm formula the
+# heterogeneous solver (core/planner.py, which re-exports both constants and
+# layers overlap-awareness on top) and any cp costing here must share, so
+# the solver and the wave packer can never rank configs differently
+# (tests/test_planner.py pins the agreement).
+RING_LATENCY = 512.0
+RING_BW = 0.02
+
+
+def ring_comm_cost(n_chunks: int, chunk_size: int, cp: int,
+                   k: int = 1) -> float:
+    """Serial (un-overlapped) communication cost of running one ring unit
+    through Algorithm 2: ``ring_step_count`` ppermute hops (the executors'
+    ``stats.ring_steps`` with n_layers=1), each paying fixed latency + the
+    bandwidth cost of the circulating (cap + C)/cp K/V shard."""
+    if cp <= 1:
+        return 0.0
+    hops = ring_step_count(n_chunks, cp, k=k)
+    shard = (prefix_capacity(n_chunks, chunk_size) + chunk_size) / cp
+    return hops * (RING_LATENCY + RING_BW * shard)
+
+
 def unit_work(chunk_works, k: int = 1) -> float:
     """Full Algorithm-2 cost of a unit: every chunk pays F + 2F (backward);
     the first N-K chunks pay one recompute forward."""

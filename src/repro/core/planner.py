@@ -56,13 +56,11 @@ from repro.core.schedule_sim import simulate_rotation
 # that does NOT shrink when the ring divides the tokens. This term is what
 # makes short chunks ring-ineligible.
 TICK_OVERHEAD = 2000.0
-# Fixed per-ppermute-hop latency (token units — a blocking neighbor
-# collective costs the equivalent of ~512 tokens of trunk compute) and the
-# bandwidth cost of moving one K/V token around the ring. Hops are counted
-# by dp_balance.ring_step_count — the same accounting the executors report
-# in stats.ring_steps — so the comm term is pinned to the real hop count.
-RING_LATENCY = 512.0
-RING_BW = 0.02
+# Ring cost constants live in dp_balance (ONE home — the wave packer and
+# this solver must price a hop identically; tests pin the agreement) and are
+# re-exported here for existing callers.
+RING_LATENCY = dp_balance.RING_LATENCY
+RING_BW = dp_balance.RING_BW
 
 # Exact-solve bound: at or below this many units the solver enumerates every
 # ring/packed subset (2^n scored partitions); above it, the sorted-prefix
@@ -89,31 +87,52 @@ def tick_cost(n_chunks: int, chunk_size: int, cp: int = 1, *,
 
 
 def ring_comm_cost(n_chunks: int, chunk_size: int, cp: int,
-                   k: int = 1) -> float:
+                   k: int = 1, *, overlap: bool = False) -> float:
     """Communication cost of running one ring unit through Algorithm 2:
     ``ring_step_count`` ppermute hops (the executors' ``stats.ring_steps``
     with n_layers=1), each paying fixed latency + the bandwidth cost of the
-    circulating (cap + C)/cp K/V shard."""
+    circulating (cap + C)/cp K/V shard. The serial formula is canonical in
+    ``dp_balance.ring_comm_cost``; this delegates to it.
+
+    With ``overlap=True`` (the double-buffered ring the executors run by
+    default) the ``dp_balance.overlapped_ring_hops`` K/V prefetch hops hide
+    under the hop's flash kernel and only pay their EXPOSED remainder
+    ``max(0, comm_per_hop - per_hop_kernel)``; the dk/dv accumulator's final
+    hops home stay fully exposed."""
     if cp <= 1:
         return 0.0
-    hops = ring_step_count(n_chunks, cp, k=k)
-    shard = (prefix_capacity(n_chunks, chunk_size) + chunk_size) / cp
-    return hops * (RING_LATENCY + RING_BW * shard)
+    serial = dp_balance.ring_comm_cost(n_chunks, chunk_size, cp, k=k)
+    if not overlap:
+        return serial
+    n = n_chunks
+    rec = max(n - max(1, k), 0)
+    total = ring_step_count(n, cp, k=k)
+    hidden = dp_balance.overlapped_ring_hops(n + rec, n, cp)
+    exposed = total - hidden
+    comm_per_hop = serial / total
+    # One tick's kernel spans cp ring hops, so a single hop can hide under
+    # ~1/cp of the tick's compute (overhead excluded: launch cost does not
+    # shrink and is not a hiding window).
+    per_hop_kernel = tick_cost(n, chunk_size, cp, overhead=0.0) / cp
+    return (hidden * max(0.0, comm_per_hop - per_hop_kernel)
+            + exposed * comm_per_hop)
 
 
 def wave_cost(n_chunks: int, chunk_size: int, k: int, cp: int,
-              pp: int = 1) -> float:
+              pp: int = 1, *, overlap: bool = False) -> float:
     """Closed-form cost of one lockstep wave: the Algorithm-2 schedule of
     its padded ``n_chunks`` slot stream (every slot F + 2x B, first N-K
     recomputed), at the static-shape tick cost, run through the rotation
     pipeline when pp > 1 (``simulate_rotation`` — at pp == 1 this reduces
-    to exactly (3N + recompute) ticks), plus the ring-communication term.
+    to exactly (3N + recompute) ticks), plus the ring-communication term
+    (overlap-discounted when ``overlap=True``; see ``ring_comm_cost``).
     """
     if n_chunks <= 0:
         return 0.0
     unit = tick_cost(n_chunks, chunk_size, cp)
     sched = simulate_rotation([n_chunks], max(pp, 1), k, unit=unit).makespan
-    return sched + ring_comm_cost(n_chunks, chunk_size, cp, k=k)
+    return sched + ring_comm_cost(n_chunks, chunk_size, cp, k=k,
+                                  overlap=overlap)
 
 
 # ------------------------------------------------------------------ plan ----
@@ -168,6 +187,16 @@ class ExecutionPlan:
     blockwise_threshold: int = 8192
     predicted_makespan: float = 0.0
     mesh: Any = None
+    # Ring-overlap depth: True double-buffers the cp ring (hop i+1's
+    # ppermute issued under hop i's kernel — numerically identical, comm
+    # mostly hidden); False runs the serial ring (debug / A-B timing).
+    ring_overlap: bool = True
+    # Host-offloaded StateStore: cold prefix capacity buckets live in pinned
+    # host memory and stream back on the planner's prefetch schedule
+    # (`prefix_access_order`), bounding the device-resident set to the
+    # latest version + K vjp-captured versions + the prefetch window.
+    offload_statestore: bool = False
+    prefetch_depth: int = 2
 
     @property
     def mesh_shape(self) -> dict:
@@ -194,11 +223,49 @@ class ExecutionPlan:
                 f"makespan={self.predicted_makespan:.0f}")
 
 
-def plan_makespan(waves, chunk_size: int, k: int, pp: int = 1) -> float:
+def plan_makespan(waves, chunk_size: int, k: int, pp: int = 1, *,
+                  overlap: bool = False) -> float:
     """Total simulated makespan of a wave list — the additive lockstep sum
     the executors realize (waves run back to back on the whole mesh)."""
-    return sum(wave_cost(w.n_chunks, chunk_size, k, w.cp, pp=pp)
+    return sum(wave_cost(w.n_chunks, chunk_size, k, w.cp, pp=pp,
+                         overlap=overlap)
                for w in waves)
+
+
+# ------------------------------------------------- StateStore offload -------
+def prefix_access_order(n_chunks: int, k: int) -> list:
+    """The exact order Algorithm 2 reads StateStore prefix versions: chunk i
+    reads version i at its F event (ascending), then the recomputed F2
+    events re-read versions keep_from-1 .. 0 (descending). This is the
+    per-WavePlan prefetch schedule the host-offloaded store consumes —
+    `tests/test_statestore.py` pins it equal to the order `run_group`
+    derives from `alg2_schedule` itself."""
+    n = n_chunks
+    keep_from = max(n - max(1, k), 0)
+    return list(range(n)) + list(reversed(range(keep_from)))
+
+
+def statestore_device_bytes(n_chunks: int, chunk_size: int, cp: int = 1, *,
+                            n_layers: int = 1, bytes_per_token: float = 1.0,
+                            k: int = 1, offload: bool = False,
+                            prefetch_depth: int = 2) -> float:
+    """Peak per-device resident StateStore K/V bytes for one ring unit.
+
+    Without offload every written prefix version stays device-resident until
+    the group's backward completes (retained chunks' vjp closures capture
+    their input version; the executor's version list pins the rest), so
+    residency is (n_chunks + 1) capacity buffers. With offload the device
+    store is bounded by the latest version, the K vjp-captured retained
+    versions, one in-flight write, plus the ``prefetch_depth`` C-slot
+    host->device streaming window — independent of sequence length's
+    version count.
+    """
+    cap = prefix_capacity(n_chunks, chunk_size)
+    shard = cap * n_layers * bytes_per_token / cp
+    if not offload:
+        return (n_chunks + 1) * shard
+    window = (prefetch_depth * chunk_size * n_layers * bytes_per_token) / cp
+    return (max(1, k) + 2) * shard + window
 
 
 # ---------------------------------------------------------------- solver ----
@@ -308,7 +375,9 @@ def _legacy_waves(units, *, data: int, seq: int, policy: str,
 def plan_batch(groups, standalone, mesh=None, *, k: int = 1,
                policy: str = "solve", cp_threshold: int = 0,
                blockwise_threshold: int = 8192,
-               horizon: float = dp_balance.ATTN_HORIZON) -> ExecutionPlan:
+               horizon: float = dp_balance.ATTN_HORIZON,
+               ring_overlap: bool = True, offload_statestore: bool = False,
+               prefetch_depth: int = 2) -> ExecutionPlan:
     """Solve (or legacy-form) the ExecutionPlan for one materialized batch.
 
     groups / standalone: `launch.train.build_host_batches` output — the
@@ -344,8 +413,11 @@ def plan_batch(groups, standalone, mesh=None, *, k: int = 1,
     return ExecutionPlan(
         data=data, pipe=pipe, seq=seq, chunk_size=chunk_size, k=k,
         waves=waves, policy=policy, blockwise_threshold=blockwise_threshold,
-        predicted_makespan=plan_makespan(waves, chunk_size, k, pp=pipe),
-        mesh=mesh if not isinstance(mesh, dict) else None)
+        predicted_makespan=plan_makespan(waves, chunk_size, k, pp=pipe,
+                                         overlap=ring_overlap),
+        mesh=mesh if not isinstance(mesh, dict) else None,
+        ring_overlap=ring_overlap, offload_statestore=offload_statestore,
+        prefetch_depth=prefetch_depth)
 
 
 def plan_lengths(lengths: dict, chunk_size: int, mesh=None, *, k: int = 1,

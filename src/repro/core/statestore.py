@@ -26,8 +26,13 @@ Operations:
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.dp_balance import prefix_capacity  # noqa: F401  (re-export)
@@ -191,6 +196,172 @@ def split_prefix_cot(cfg: ModelConfig, cot, i: int, chunk_size: int):
                 c["enc_out"] = None
             out[j] = c
     return out
+
+
+# ------------------------------------------------------ host offload --------
+@functools.lru_cache(maxsize=1)
+def _pinned_host_sharding():
+    """SingleDeviceSharding(memory_kind="pinned_host") when the backend
+    exposes host memory spaces (TPU / recent GPU jaxlibs); None on backends
+    without them (CPU) — the store then mirrors via plain numpy host
+    arrays, which is semantically identical (only the DMA path differs)."""
+    try:
+        dev = jax.devices()[0]
+        sh = jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
+        jax.device_put(jnp.zeros((1,), jnp.float32), sh).block_until_ready()
+        return sh
+    except Exception:
+        return None
+
+
+def _to_host(tree):
+    """Mirror a device tree into (pinned, when available) host memory."""
+    sh = _pinned_host_sharding()
+    if sh is not None:
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+    return jax.tree.map(np.asarray, tree)
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(x.size) * int(jnp.dtype(x.dtype).itemsize)
+               for x in jax.tree.leaves(tree))
+
+
+@dataclasses.dataclass
+class PrefixStoreStats:
+    """Residency accounting the executors surface in SchedulerStats."""
+    device_bytes_peak: int = 0   # peak store-held device bytes (vjp-captured
+    #                              residuals are accounted by max_live_residuals)
+    host_bytes: int = 0          # peak host-mirrored bucket bytes
+    prefetches: int = 0          # host->device bucket transfers issued
+    offloaded: bool = False
+
+
+class PrefixStore:
+    """Versioned prefix buffer for Algorithm 2, with optional host offload.
+
+    The executor writes version i+1 = `write_own(version_i, own_i, i*C)`
+    after chunk i's forward and reads version i at chunk i's F and F2
+    events. ``offload=False`` keeps every version on device (bit-compatible
+    with the executor's original rolling list — version i stays alive until
+    the group ends). ``offload=True`` bounds the device store:
+
+      * only the LATEST version stays device-resident during the ascending
+        forward sweep (retained chunks' vjp closures capture their own input
+        version independently, so dropping older store references frees
+        exactly the versions nothing will read again);
+      * each newly written C-slot bucket ``own_i`` is mirrored to (pinned,
+        when the backend has it) host memory;
+      * `drop_device()` (first backward event — no more ascending reads)
+        releases the rolling version too;
+      * F2 re-reads are served by ONE reassembled buffer streamed back from
+        the host buckets on the planner's access schedule
+        (`planner.prefix_access_order`), transfers issued
+        ``prefetch_depth`` buckets ahead (JAX async dispatch — the same
+        double-buffering idiom as `data.prefetch.Prefetcher`) so they hide
+        under the retained chunks' backward compute. Exactness: chunk i's
+        prefix_seg metadata zeroes every slot at or beyond i*C, so a buffer
+        holding MORE buckets than chunk i ever wrote reads identically to
+        its original version — forward and cotangent alike
+        (`split_prefix_cot` routes only j < i).
+
+    Offload applies to K/V-bucketed families (dense/moe/vlm); recurrent
+    leaves have no capacity buckets, so other families silently run
+    un-offloaded.
+    """
+
+    def __init__(self, cfg: ModelConfig, init_prefix, n_chunks: int,
+                 chunk_size: int, k: int, *, offload: bool = False,
+                 prefetch_depth: int = 2, schedule=None):
+        self.cfg = cfg
+        self.n = n_chunks
+        self.C = chunk_size
+        self.k = max(1, k)
+        self.offload = bool(offload) and _attn_like(cfg)
+        self.prefetch_depth = max(1, int(prefetch_depth))
+        self.schedule = list(schedule) if schedule is not None else None
+        self._versions = {0: init_prefix}
+        self._latest = 0
+        self._host = {}            # bucket j -> host mirror of own_j
+        self._reassembled = None
+        self._spec = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), init_prefix)
+        self.stats = PrefixStoreStats(offloaded=self.offload)
+        self._note_device()
+
+    def _note_device(self):
+        held = [v for v in self._versions.values()]
+        if self._reassembled is not None:
+            held.append(self._reassembled)
+        bytes_now = sum(_tree_bytes(v) for v in held)
+        self.stats.device_bytes_peak = max(self.stats.device_bytes_peak,
+                                           bytes_now)
+
+    def put(self, version: int, prefix, own):
+        """Record ``prefix`` as version ``version`` (chunk version-1's own
+        bucket ``own`` written at offset (version-1)*C)."""
+        if self.offload:
+            self._host[version - 1] = _to_host(own)
+            self.stats.host_bytes = max(
+                self.stats.host_bytes,
+                sum(_tree_bytes(b) for b in self._host.values()))
+            self._versions = {version: prefix}
+        else:
+            self._versions[version] = prefix
+        self._latest = version
+        self._note_device()
+
+    def get(self, i: int):
+        """Prefix for chunk i's forward. F events read the live version;
+        offloaded F2 re-reads get the reassembled buffer (exact by the
+        seg-mask argument above)."""
+        if i in self._versions:
+            return self._versions[i]
+        if not self.offload:
+            raise KeyError(i)
+        return self._reassemble()
+
+    def drop_device(self):
+        """Release the rolling device version (first backward event: the
+        ascending sweep is over; retained vjp closures own what they need)."""
+        if self.offload:
+            self._versions = {}
+
+    def _needed_buckets(self):
+        """Buckets the F2 phase reads: the highest re-forwarded chunk is
+        keep_from-1, which reads buckets j <= keep_from-2; lower F2 chunks
+        read strict subsets (and mask the rest exactly)."""
+        if self.schedule is not None and len(self.schedule) > self.n:
+            f2 = self.schedule[self.n:]
+            hi = max(f2) if f2 else 0
+        else:
+            hi = max(self.n - self.k, 0) - 1
+        return [j for j in sorted(self._host) if j < hi]
+
+    def _reassemble(self):
+        if self._reassembled is not None:
+            return self._reassembled
+        leaves = jax.tree.leaves(self._spec)
+        B = leaves[0].shape[1] if leaves[0].ndim > 3 else leaves[0].shape[0]
+        cap = prefix_len(self.cfg, self._spec)
+        buf = alloc_prefix(self.cfg, B, cap, leaves[0].dtype)
+        queue = collections.deque()
+        todo = self._needed_buckets()
+        idx = 0
+        while queue or idx < len(todo):
+            # keep `prefetch_depth` host->device transfers in flight ahead
+            # of the bucket being written (async dispatch overlaps them
+            # with the writes and with the retained backward compute)
+            while idx < len(todo) and len(queue) < self.prefetch_depth:
+                j = todo[idx]
+                idx += 1
+                queue.append((j, jax.tree.map(jnp.asarray, self._host[j])))
+                self.stats.prefetches += 1
+            j, dev = queue.popleft()
+            buf = write_own(self.cfg, buf, dev, j * self.C)
+        self._reassembled = buf
+        self._note_device()
+        return buf
 
 
 def tree_add(a, b):

@@ -57,7 +57,8 @@ def reset_cp_trace_log():
 
 
 @functools.lru_cache(maxsize=None)
-def _cp_chunk_fn(cfg: ModelConfig, blockwise_threshold: int, mesh, cp: int):
+def _cp_chunk_fn(cfg: ModelConfig, blockwise_threshold: int, mesh, cp: int,
+                 ring_overlap: bool = True):
     """Jitted Algorithm-2 chunk fn with the transformer trunk under a
     shard_map over ("data", "seq"): (params, prefix, batch) -> (loss, own).
     Drop-in replacement for `chunked_step._jitted_chunk_fn` on ring waves.
@@ -75,7 +76,8 @@ def _cp_chunk_fn(cfg: ModelConfig, blockwise_threshold: int, mesh, cp: int):
             h, new_kv = L.attention_layer(
                 lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
                 positions=pos, segment_ids=seg, prefix=prefix, window=window,
-                blockwise_threshold=blockwise_threshold, cp_axis=AXIS, cp=cp)
+                blockwise_threshold=blockwise_threshold, cp_axis=AXIS, cp=cp,
+                ring_overlap=ring_overlap)
             x = x + h
             h2 = L.swiglu_mlp(lp["mlp"], L.rms_norm(x, lp["ln2"],
                                                     cfg.norm_eps))
@@ -171,7 +173,8 @@ def run_batch_cp(cfg: ModelConfig, params, batch, plan=None, mesh=None, *,
     def chunk_fn_for_wave(wave, slots):
         cp = eff_cp(wave, slots)
         if cp > 1:
-            return _cp_chunk_fn(cfg, plan.blockwise_threshold, mesh, cp)
+            return _cp_chunk_fn(cfg, plan.blockwise_threshold, mesh, cp,
+                                plan.ring_overlap)
         return None
 
     def wave_done(wave, slots, stats, n_fwd, n_bwd):
@@ -180,6 +183,9 @@ def run_batch_cp(cfg: ModelConfig, params, batch, plan=None, mesh=None, *,
         if cp > 1:
             stats.ring_steps += dp_balance.ring_hops(n_fwd, n_bwd, cp,
                                                      cfg.num_layers)
+            if plan.ring_overlap:
+                stats.overlapped_hops += dp_balance.overlapped_ring_hops(
+                    n_fwd, n_bwd, cp, cfg.num_layers)
 
     return cs.run_planned_waves(
         cfg, params, plan, scale=scale,

@@ -69,7 +69,8 @@ def split_stages(layer_params, n_stages: int):
 
 def _stage_apply(cfg: ModelConfig, stage_layers, windows, x, pos, seg,
                  kbuf, vbuf, p_pos, p_seg, blockwise_threshold: int,
-                 cp: int = 1, cp_axis: str = "seq"):
+                 cp: int = 1, cp_axis: str = "seq",
+                 ring_overlap: bool = True):
     """Run this stage's layer slab over one chunk.
 
     kbuf/vbuf: (Lp, B, cap, Hkv, hd) resident K/V of earlier chunks;
@@ -90,7 +91,8 @@ def _stage_apply(cfg: ModelConfig, stage_layers, windows, x, pos, seg,
             lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
             positions=pos, segment_ids=seg, prefix=prefix, window=window,
             blockwise_threshold=blockwise_threshold,
-            cp_axis=(cp_axis if cp > 1 else None), cp=cp)
+            cp_axis=(cp_axis if cp > 1 else None), cp=cp,
+            ring_overlap=ring_overlap)
         x = x + h
         h2 = L.swiglu_mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps))
         return x + h2, new_kv
@@ -235,6 +237,7 @@ class PipelineStats:
     backward_calls: int = 0
     max_live_residuals: int = 0        # live residual chunk-states (<= K)
     ring_steps: int = 0                # context-parallel ppermute hops
+    overlapped_hops: int = 0           # hops issued under a kernel (overlap)
     wave_cps: list = dataclasses.field(default_factory=list)  # effective cp
     # tick accounting, in simulate_rotation units (F tick = 1, B tick = 2)
     makespan_units: float = 0.0
@@ -262,7 +265,7 @@ def _windows_slab(cfg: ModelConfig, n_stages: int):
 @functools.lru_cache(maxsize=None)
 def _window_step_fn(cfg: ModelConfig, mesh, n_stages: int,
                     blockwise_threshold: int, axis: str, cp: int = 1,
-                    wide: bool = False):
+                    wide: bool = False, ring_overlap: bool = True):
     """Jitted loss/state fn for ONE rotation window: (params, kv, batch) ->
     (loss, kv_out). Compiles once per (window, capacity, rows) shape.
 
@@ -310,7 +313,7 @@ def _window_step_fn(cfg: ModelConfig, mesh, n_stages: int,
             y, nk, nv = _stage_apply(
                 cfg, stage_layers, windows, x_in, pos_mbs[j], seg_mbs[j],
                 kbuf, vbuf, ppos_mbs[j], pseg_mbs[j], blockwise_threshold,
-                cp=cp)
+                cp=cp, ring_overlap=ring_overlap)
 
             if cap >= Cg:      # store this chunk's K/V at its slot offset
                 write = (valid & (write_flags[j] > 0)).astype(kbuf.dtype)
@@ -393,7 +396,8 @@ def _tree_bytes(tree) -> int:
 def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
                         mesh, n_stages: int, loss_scale: float, grads,
                         stats: PipelineStats, blockwise_threshold: int,
-                        axis: str = "pipe", cp: int = 1, wide: bool = False):
+                        axis: str = "pipe", cp: int = 1, wide: bool = False,
+                        ring_overlap: bool = True):
     """Algorithm 2 over one lockstep wave of chunk slots, pipelined.
 
     slots: list of (R, C) stacked chunk batches (one row per DP rank, dummy
@@ -440,7 +444,8 @@ def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
     stats.wave_sizes.append(n)
     stats.kv_capacity_slots.append(cap // C if C else 0)
 
-    f = _window_step_fn(cfg, mesh, S, blockwise_threshold, axis, cp, wide)
+    f = _window_step_fn(cfg, mesh, S, blockwise_threshold, axis, cp, wide,
+                        ring_overlap)
     scale = jnp.asarray(loss_scale, jnp.float32)
 
     def window_batch(g0, g1):
@@ -512,6 +517,9 @@ def _run_wave_pipelined(cfg: ModelConfig, params, slots, *, k: int,
         rec = stats.recompute_calls - recompute0
         stats.ring_steps += dp_balance.ring_hops(n + rec, n, cp,
                                                  cfg.num_layers)
+        if ring_overlap:
+            stats.overlapped_hops += dp_balance.overlapped_ring_hops(
+                n + rec, n, cp, cfg.num_layers)
     return total_loss, grads
 
 
@@ -580,6 +588,7 @@ def run_batch_pipelined(cfg: ModelConfig, params, batch, plan=None,
             cfg, params, slots, k=plan.k, mesh=mesh, n_stages=S,
             loss_scale=scale, grads=grads, stats=stats,
             blockwise_threshold=plan.blockwise_threshold, axis=axis,
-            cp=(cp if ring else 1), wide=wide)
+            cp=(cp if ring else 1), wide=wide,
+            ring_overlap=plan.ring_overlap)
         total_loss = total_loss + l
     return total_loss, grads, stats

@@ -358,7 +358,7 @@ def _merge_partials(o_a, lse_a, o_b, lse_b):
 
 @functools.lru_cache(maxsize=None)
 def _ring_attention_fn(axis_name: str, cp: int, softcap: float, block_q: int,
-                       block_k: int, interpret: bool):
+                       block_k: int, interpret: bool, overlap: bool):
     """Ring flash attention over a ``shard_map`` axis of size ``cp``.
 
     Called with this rank's Q shard and K/V *ring shard*; the K/V (with its
@@ -368,7 +368,19 @@ def _ring_attention_fn(axis_name: str, cp: int, softcap: float, block_q: int,
     (q-shard, kv-shard) pair depend only on the *global* LSE and
     delta = rowsum(do * o), so each hop reuses the existing ``_flash_bwd``
     Pallas kernels unchanged; the dk/dv accumulator travels WITH its kv
-    shard around the ring and a final hop returns it to the owner."""
+    shard around the ring and a final hop returns it to the owner.
+
+    ``overlap`` double-buffers the ring (FlexSP §5): hop ``step+1``'s
+    ppermute is ISSUED before hop ``step``'s flash kernel, so the neighbor
+    collective has no data dependency on the kernel and XLA is free to run
+    them concurrently. The hop order, merge order and accumulate order are
+    identical to the serial schedule, so the result is numerically the
+    same — only the dispatch order (and therefore the exposed comm time)
+    changes. In the backward the K/V prefetch hoists the same way; the
+    dk/dv accumulator rotation necessarily stays after the hop's
+    accumulate (it consumes dk_h/dv_h), but nothing downstream blocks on
+    it until the NEXT accumulate, so it overlaps the next kernel by
+    dataflow."""
     kw = dict(softcap=softcap, block_q=block_q, block_k=block_k,
               interpret=interpret)
     perm = [(i, (i + 1) % cp) for i in range(cp)]
@@ -380,12 +392,14 @@ def _ring_attention_fn(axis_name: str, cp: int, softcap: float, block_q: int,
         kc, vc, pc, sc = k, v, k_pos, k_seg
         o = lse = None
         for step in range(cp):
+            nxt = (rotate(kc, vc, pc, sc)
+                   if overlap and step < cp - 1 else None)
             o_h, lse_h = _flash_fwd(q, kc, vc, q_pos, pc, q_seg, sc, w, **kw)
             o_h = o_h.astype(jnp.float32)
             o, lse = ((o_h, lse_h) if o is None
                       else _merge_partials(o, lse, o_h, lse_h))
             if step < cp - 1:
-                kc, vc, pc, sc = rotate(kc, vc, pc, sc)
+                kc, vc, pc, sc = nxt if overlap else rotate(kc, vc, pc, sc)
         return o.astype(q.dtype), lse
 
     @jax.custom_vjp
@@ -405,13 +419,16 @@ def _ring_attention_fn(axis_name: str, cp: int, softcap: float, block_q: int,
         dk = jnp.zeros(k.shape, jnp.float32)
         dv = jnp.zeros(v.shape, jnp.float32)
         for step in range(cp):
+            nxt = (rotate(kc, vc, pc, sc)
+                   if overlap and step < cp - 1 else None)
             dq_h, dk_h, dv_h = _flash_bwd(q, kc, vc, q_pos, pc, q_seg, sc, w,
                                           do, lse, delta, **kw)
             dq += dq_h.astype(jnp.float32)
             dk += dk_h.astype(jnp.float32)
             dv += dv_h.astype(jnp.float32)
             if step < cp - 1:
-                kc, vc, pc, sc = rotate(kc, vc, pc, sc)
+                kc, vc, pc, sc = (nxt if overlap
+                                  else rotate(kc, vc, pc, sc))
                 dk, dv = rotate(dk, dv)
         dk, dv = rotate(dk, dv)      # return each accumulator to its owner
         return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
@@ -425,16 +442,21 @@ def ring_chunked_prefix_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
                                   axis_name: str, cp: int, window=0,
                                   softcap: float = 0.0, block_q: int = 128,
                                   block_k: int = 128,
-                                  interpret: bool = False):
+                                  interpret: bool = False,
+                                  overlap: bool = True):
     """Context-parallel chunked attention. MUST be called inside a
     ``shard_map`` over ``axis_name`` (size ``cp``): q is this rank's query
     shard (B, Hq, T/cp, D), k/v this rank's K/V ring shard (B, Hkv, S/cp, D)
     with matching k_pos/k_seg. Same mask contract and trainability as
     ``chunked_prefix_attention``; numerically equal to running the
-    single-device kernel on the gathered shards (~1e-6, f32 merge order)."""
+    single-device kernel on the gathered shards (~1e-6, f32 merge order).
+    ``overlap`` (default on) double-buffers the ring — hop i+1's ppermute
+    issues before hop i's kernel; same hop/merge order, so exactness is
+    unchanged (tests pin overlap-on == serial to the same tolerance)."""
     w = jnp.asarray(0 if window is None else window, jnp.int32).reshape(1)
     fn = _ring_attention_fn(str(axis_name), int(cp), float(softcap),
-                            int(block_q), int(block_k), bool(interpret))
+                            int(block_q), int(block_k), bool(interpret),
+                            bool(overlap))
     return fn(q, k, v, q_pos, k_pos, q_seg, k_seg, w)
 
 

@@ -67,14 +67,16 @@ def chunk_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *, window=None,
 
 def ring_chunk_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *, axis_name,
                          cp, window=None, softcap=0.0, block_q=128,
-                         block_k=128, interpret=True):
+                         block_k=128, interpret=True, overlap=True):
     """Context-parallel chunk attention — the ``shard_map`` sibling of
     ``chunk_attention``. q: (B, T_loc, Hq, D) is this rank's query shard;
     k/v: (B, S_loc, Hkv, D) this rank's K/V ring shard (its slice of
     prefix ++ own, already rope-rotated), which circulates over ``axis_name``
     via ppermute. Not jitted here: the caller's chunk fn owns the jit (we
     are inside its shard_map region). Pad slots get seg=0 — every rank pads
-    identically, so the ring stays shape-uniform."""
+    identically, so the ring stays shape-uniform. ``overlap`` double-buffers
+    the ring (next hop's ppermute issued under the current hop's kernel);
+    exactness is unchanged."""
     B, T, Hq, D = q.shape
     S = k.shape[1]
     block_q = min(block_q, T)
@@ -87,7 +89,8 @@ def ring_chunk_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *, axis_name,
         _pad_to(q_pos, 1, block_q), _pad_to(k_pos, 1, block_k),
         _pad_to(q_seg, 1, block_q), _pad_to(k_seg, 1, block_k),
         axis_name=axis_name, cp=cp, window=window, softcap=float(softcap),
-        block_q=block_q, block_k=block_k, interpret=interpret)
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        overlap=overlap)
     return o[:, :, :T].transpose(0, 2, 1, 3)
 
 

@@ -70,7 +70,8 @@ def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
           max_len: int = 2048, log_every: int = 1, checkpoint_path=None,
           sampler=None, mesh=None, prefetch_depth: int = 2,
           plan_policy: str = "solve", cp_threshold: int = 0,
-          resume_path=None):
+          resume_path=None, ring_overlap: bool = True,
+          offload_statestore: bool = False, store_prefetch_depth: int = 2):
     params = api.init_params(cfg, jax.random.PRNGKey(tc.seed),
                              max_seq=max_len + 8)
     opt_state = adamw.adamw_init(params)
@@ -131,10 +132,21 @@ def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
             # staging copy on the default device)
             gb, sb = (gb_h, sb_h) if (dp > 1 or pp > 1 or cp > 1) \
                 else _to_device(gb_h, sb_h)
+            # mesh=None gets an explicit trivial plan too (not None): the
+            # bare plan=None default is k=1, which would silently drop --k
+            # (and the offload/overlap knobs) on the single-device path
             plan = (planner.plan_batch(gb, sb, mesh, k=tc.k_chunks,
                                        policy=plan_policy,
-                                       cp_threshold=cp_threshold)
-                    if mesh is not None else None)
+                                       cp_threshold=cp_threshold,
+                                       ring_overlap=ring_overlap,
+                                       offload_statestore=offload_statestore,
+                                       prefetch_depth=store_prefetch_depth)
+                    if mesh is not None else
+                    planner.ExecutionPlan(
+                        data=1, pipe=1, seq=1, chunk_size=tc.chunk_size,
+                        k=tc.k_chunks, waves=[], ring_overlap=ring_overlap,
+                        offload_statestore=offload_statestore,
+                        prefetch_depth=store_prefetch_depth))
             loss, grads, stats = chunked_step.run_batch(
                 cfg, params, (gb, sb), plan)
             lr = adamw.cosine_schedule(step, base_lr=tc.learning_rate,
@@ -153,6 +165,14 @@ def train(cfg, tc: TrainConfig, *, batch_per_step: int = 8,
                 history[-1]["bubble_ratio"] = stats.bubble_ratio
             if cp > 1:
                 history[-1]["ring_steps"] = stats.ring_steps
+                history[-1]["overlapped_hops"] = stats.overlapped_hops
+            if offload_statestore and hasattr(stats,
+                                              "resident_statestore_bytes"):
+                history[-1]["store_device_bytes"] = \
+                    stats.resident_statestore_bytes
+                history[-1]["store_host_bytes"] = \
+                    stats.offloaded_statestore_bytes
+                history[-1]["store_prefetches"] = stats.statestore_prefetches
             if step % log_every == 0:
                 h = history[-1]
                 print(f"step {step:4d} loss {h['loss']:.4f}"
@@ -214,6 +234,20 @@ def main(argv=None):
                          "stream is replayed to the restored step)")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="host-side prefetch depth (0 = synchronous)")
+    ap.add_argument("--ring-overlap", type=int, default=1,
+                    help="1 (default): double-buffer the cp ring — hop i+1's "
+                         "K/V ppermute issued under hop i's flash kernel, in "
+                         "forward and backward (numerically identical); "
+                         "0: serial ring (debug / A-B timing)")
+    ap.add_argument("--offload-statestore", action="store_true",
+                    help="host-offload cold StateStore prefix versions: only "
+                         "the latest capacity buffer stays device-resident; "
+                         "written C-slot buckets mirror to (pinned, where "
+                         "available) host memory and stream back on the "
+                         "planner's prefetch schedule for the F2 re-reads")
+    ap.add_argument("--store-prefetch", type=int, default=2,
+                    help="StateStore host->device prefetch depth: buckets "
+                         "kept in flight ahead of the F2 reassembly writes")
     ap.add_argument("--plan", default="solve",
                     choices=("solve", "lpt", "round_robin"),
                     help="wave planning policy: 'solve' = heterogeneous "
@@ -269,7 +303,10 @@ def main(argv=None):
     train(cfg, tc, batch_per_step=args.batch, max_len=args.max_len,
           checkpoint_path=args.checkpoint, mesh=mesh,
           prefetch_depth=args.prefetch, plan_policy=args.plan,
-          cp_threshold=args.cp_threshold, resume_path=args.resume)
+          cp_threshold=args.cp_threshold, resume_path=args.resume,
+          ring_overlap=bool(args.ring_overlap),
+          offload_statestore=args.offload_statestore,
+          store_prefetch_depth=args.store_prefetch)
 
 
 def _tune(args, cfg, tc):

@@ -251,7 +251,7 @@ def init_attention(key, cfg: ModelConfig, dtype):
 
 def attention_layer(p, x, cfg: ModelConfig, *, positions, segment_ids,
                     prefix=None, window=None, blockwise_threshold=8192,
-                    cross_kv=None, cp_axis=None, cp=1):
+                    cross_kv=None, cp_axis=None, cp=1, ring_overlap=True):
     """Returns (out, new_kv) where new_kv = {"k","v"} of THIS chunk (for the
     ChunkFlow state store).
 
@@ -264,6 +264,8 @@ def attention_layer(p, x, cfg: ModelConfig, *, positions, segment_ids,
     token shard and ``prefix`` this rank's slice of the (seq-sharded)
     StateStore. Attention then runs as a ppermute ring over ``cp_axis``
     (kernels.ops.ring_chunk_attention) and new_kv is the local shard.
+    ring_overlap: double-buffer the ring (next hop's ppermute under the
+    current hop's kernel) — numerically identical either way.
     """
     B, T, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -321,7 +323,8 @@ def attention_layer(p, x, cfg: ModelConfig, *, positions, segment_ids,
             q, k_all, v_all, pos1d, k_pos, segment_ids, k_seg,
             axis_name=cp_axis, cp=cp, window=window,
             softcap=cfg.attn_softcap,
-            interpret=(cfg.attn_backend != "pallas"))
+            interpret=(cfg.attn_backend != "pallas"),
+            overlap=ring_overlap)
     elif cfg.attn_backend in ("pallas", "pallas_interpret"):
         from repro.kernels import ops
         out = ops.chunk_attention(

@@ -1,0 +1,98 @@
+"""The CI perf-regression gate's failure modes, both directions:
+
+  * a GATED benchmark missing from --current under --require-all (the bench
+    didn't run / didn't emit) fails the build;
+  * an orphan BENCH_*.json in --current that the GATED registry doesn't
+    know (new benchmark, no committed baseline) fails under --require-all
+    with the register + --update hint, and --update adopts it into the
+    baseline dir.
+
+Pure-host: drives benchmarks.check_regression.main() on tmp dirs.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import check_regression as cr  # noqa: E402
+
+
+def _write(path, payload):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    cur = tmp_path / "bench"
+    base = tmp_path / "baselines"
+    cur.mkdir()
+    base.mkdir()
+    # a complete, passing GATED population in both dirs
+    for name in cr.GATED:
+        _write(str(cur / name), {"gate": {"m": 1.0}})
+        _write(str(base / name), {"gate": {"m": 1.0}})
+    return str(cur), str(base)
+
+
+def _main(cur, base, *extra):
+    return cr.main(["--current", cur, "--baseline", base, *extra])
+
+
+def test_complete_population_passes(dirs, capsys):
+    cur, base = dirs
+    assert _main(cur, base, "--require-all") == 0
+    assert "perf gate OK" in capsys.readouterr().out
+
+
+def test_missing_current_fails_require_all(dirs, capsys):
+    """Direction 1: a gated benchmark that did not run/emit in CI."""
+    cur, base = dirs
+    victim = sorted(cr.GATED)[0]
+    os.remove(os.path.join(cur, victim))
+    assert _main(cur, base, "--require-all") == 1
+    assert "did not run" in capsys.readouterr().err
+    # local mode (no --require-all) skips instead
+    assert _main(cur, base) == 0
+
+
+def test_gated_without_baseline_fails_with_update_hint(dirs, capsys):
+    """A registered benchmark whose baseline was never committed."""
+    cur, base = dirs
+    victim = sorted(cr.GATED)[0]
+    os.remove(os.path.join(base, victim))
+    assert _main(cur, base, "--require-all") == 1
+    assert "--update" in capsys.readouterr().err
+
+
+def test_orphan_fails_require_all_with_hint(dirs, capsys):
+    """Direction 2: a benchmark that emits in CI but is not in GATED."""
+    cur, base = dirs
+    _write(os.path.join(cur, "BENCH_newthing.json"), {"gate": {"m": 2.0}})
+    assert _main(cur, base, "--require-all") == 1
+    err = capsys.readouterr().err
+    assert "BENCH_newthing.json" in err
+    assert "--update" in err and "GATED" in err
+    # without --require-all: warn-only, exit 0 (local single-bench runs)
+    assert _main(cur, base) == 0
+    assert "[orphan] BENCH_newthing.json" in capsys.readouterr().out
+
+
+def test_update_adopts_orphans(dirs):
+    cur, base = dirs
+    _write(os.path.join(cur, "BENCH_newthing.json"), {"gate": {"m": 2.0}})
+    assert _main(cur, base, "--update") == 0
+    assert os.path.exists(os.path.join(base, "BENCH_newthing.json"))
+
+
+def test_regression_still_fails(dirs, capsys):
+    """The original purpose survives the orphan scan: a >threshold gated
+    increase fails."""
+    cur, base = dirs
+    victim = "BENCH_pipeline.json"        # gated on gate.*
+    _write(os.path.join(cur, victim), {"gate": {"m": 2.0}})
+    assert _main(cur, base, "--require-all") == 1
+    assert "regression" in capsys.readouterr().err

@@ -125,6 +125,41 @@ got = chunked_step.run_batch(cfg, params, gb1, sb1, k=2, mesh=mesh)
 stats = check(("hops",), got, ref)
 assert stats.ring_steps == ring_step_count(4, 2, k=2,
                                            n_layers=cfg.num_layers)
+
+# ring overlap: double-buffered (default) vs serial ring must match the
+# single-device reference identically — the overlap only reorders WHEN the
+# ppermute is issued, never what is computed — and overlapped-hop
+# accounting matches dp_balance.overlapped_ring_hops (> 0 iff overlap on)
+import warnings
+from repro.core import planner
+warnings.simplefilter("ignore", DeprecationWarning)
+ref = single_device_ref(cfg, params, gb, sb, 2)
+mesh = mesh_lib.make_train_mesh(1, 1, 2)
+hop_stats = {}
+for overlap in (True, False):
+    plan = planner.plan_batch(gb, sb, mesh, k=2, policy="lpt",
+                              ring_overlap=overlap)
+    got = chunked_step.run_batch(cfg, params, (gb, sb), plan)
+    stats = check(("overlap", overlap), got, ref)
+    hop_stats[overlap] = stats
+assert hop_stats[False].overlapped_hops == 0
+assert 0 < hop_stats[True].overlapped_hops < hop_stats[True].ring_steps
+assert hop_stats[True].ring_steps == hop_stats[False].ring_steps
+
+# host-offloaded StateStore under the ring: exact to the same tolerance,
+# strictly smaller store-held device residency, prefetches observed
+plan = planner.plan_batch(gb, sb, mesh, k=2, policy="lpt",
+                          offload_statestore=True)
+got = chunked_step.run_batch(cfg, params, (gb, sb), plan)
+st_off = check(("offload",), got, ref)
+assert st_off.statestore_prefetches > 0
+assert st_off.offloaded_statestore_bytes > 0
+st_on = hop_stats[True]
+assert st_off.resident_statestore_bytes < st_on.resident_statestore_bytes
+
+# overlap + offload together, through the solver policy too
+plan = planner.plan_batch(gb, sb, mesh, k=2, offload_statestore=True)
+check(("solve-overlap-offload",), got, ref)
 print("CP-EQUIVALENCE-OK")
 """
 

@@ -82,6 +82,20 @@ def test_ring_step_count():
     assert dp_balance.ring_step_count(4, 1) == 0
 
 
+def test_overlapped_ring_hops():
+    """The double-buffered ring hides the cp-1 K/V prefetch rotations of
+    every forward AND backward under their kernels; the remaining exposed
+    hops are exactly the n_bwd dk/dv accumulator hops home."""
+    assert dp_balance.overlapped_ring_hops(7, 4, 2) == 1 * (7 + 4)
+    assert dp_balance.overlapped_ring_hops(7, 4, 2, n_layers=3) == 3 * 11
+    assert dp_balance.overlapped_ring_hops(4, 4, 1) == 0
+    for n_fwd, n_bwd, cp, nl in [(7, 4, 2, 1), (4, 4, 4, 3), (1, 1, 8, 2)]:
+        total = dp_balance.ring_hops(n_fwd, n_bwd, cp, nl)
+        hidden = dp_balance.overlapped_ring_hops(n_fwd, n_bwd, cp, nl)
+        assert 0 < hidden < total
+        assert total - hidden == nl * n_bwd
+
+
 # --------------------------------------------------------------- planner ----
 @pytest.mark.parametrize("world_size", [1, 2, 4, 8])
 @pytest.mark.parametrize("policy", ["lpt", "round_robin"])

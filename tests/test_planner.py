@@ -316,3 +316,99 @@ def test_mixed_cp_plan_matches_single_device():
                        cwd=os.path.dirname(
                            os.path.dirname(os.path.abspath(__file__))))
     assert "PLANNER-MIXED-CP-OK" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+# ------------------------------------------- ring cost unification ----------
+def test_ring_cost_constants_single_home():
+    """Satellite of the ring-overlap PR: the planner re-exports dp_balance's
+    ring cost constants — ONE home, so the solver and the wave packer can
+    never price a hop differently."""
+    assert planner.RING_LATENCY is dp_balance.RING_LATENCY
+    assert planner.RING_BW is dp_balance.RING_BW
+
+
+def test_ring_comm_cost_planner_agrees_with_dp_balance():
+    for n, cp, k in [(1, 2, 1), (4, 2, 1), (7, 4, 2), (74, 8, 2), (3, 1, 1)]:
+        assert planner.ring_comm_cost(n, CS, cp, k=k) == pytest.approx(
+            dp_balance.ring_comm_cost(n, CS, cp, k=k))
+
+
+def test_overlap_discounts_comm_but_never_below_exposed_floor():
+    """overlap=True hides the K/V prefetch hops under the per-hop kernel
+    window; the dk/dv accumulator's final hops home stay fully exposed, so
+    the overlapped cost is bounded below by exposed_hops * comm_per_hop and
+    above by the serial cost."""
+    for n, cp, k in [(4, 2, 1), (7, 4, 2), (74, 8, 2)]:
+        serial = planner.ring_comm_cost(n, CS, cp, k=k)
+        over = planner.ring_comm_cost(n, CS, cp, k=k, overlap=True)
+        rec = max(n - max(1, k), 0)
+        total = dp_balance.ring_step_count(n, cp, k=k)
+        hidden = dp_balance.overlapped_ring_hops(n + rec, n, cp)
+        exposed = total - hidden
+        assert exposed == n          # one accumulator hop home per backward
+        assert over <= serial + 1e-9
+        assert over >= exposed * (serial / total) - 1e-9
+    # cp=1: no ring, no cost either way
+    assert planner.ring_comm_cost(4, CS, 1, overlap=True) == 0.0
+
+
+def test_wave_cost_overlap_kwarg_threads_through():
+    for n, k, cp in [(4, 2, 2), (7, 2, 4)]:
+        ticks = 3 * n + max(0, n - k)
+        want = (ticks * planner.tick_cost(n, CS, cp)
+                + planner.ring_comm_cost(n, CS, cp, k=k, overlap=True))
+        got = planner.wave_cost(n, CS, k, cp, overlap=True)
+        assert got == pytest.approx(want)
+        assert got <= planner.wave_cost(n, CS, k, cp) + 1e-9
+
+
+# ------------------------------------------- StateStore offload plan --------
+def test_prefix_access_order_matches_alg2_schedule():
+    """The planner's analytic prefetch schedule must equal the read order
+    the executor derives from alg2_schedule itself (statestore.PrefixStore
+    consumes exactly this)."""
+    from repro.core.chunked_step import alg2_schedule
+    for n in (1, 2, 3, 5, 8, 74):
+        for k in (1, 2, 4):
+            want = [e[1] for e in alg2_schedule(n, k)
+                    if e[0] in ("F", "F2")]
+            assert planner.prefix_access_order(n, k) == want, (n, k)
+
+
+def test_statestore_device_bytes_offload_bounds():
+    """Offload decouples device residency from the VERSION count: without
+    offload the store holds n+1 capacity buffers (quadratic-ish in n, since
+    the pow2-bucketed capacity itself grows with n); with offload it holds
+    ~(k+2) buffers + the prefetch window, so the win factor approaches
+    (n+1)/(k+2) and GROWS with sequence length."""
+    per_tok = 4096.0
+    for cp in (1, 8):
+        resident, off = {}, {}
+        for n in (8, 74):
+            resident[n] = planner.statestore_device_bytes(
+                n, CS, cp, n_layers=8, bytes_per_token=per_tok, k=2,
+                offload=False)
+            off[n] = planner.statestore_device_bytes(
+                n, CS, cp, n_layers=8, bytes_per_token=per_tok, k=2,
+                offload=True, prefetch_depth=2)
+            assert off[n] < resident[n]
+        assert resident[74] / off[74] > resident[8] / off[8]
+        # paper-CDF tail group (74 chunks, k=2): win approaches 75/4
+        assert resident[74] / off[74] > 15
+
+
+def test_execution_plan_carries_overlap_and_offload():
+    plan = planner.plan_lengths({0: 4 * CS}, CS, {"data": 1, "seq": 2}, k=1)
+    assert plan.ring_overlap is True          # default: overlap on
+    assert plan.offload_statestore is False   # default: no offload
+    assert plan.prefetch_depth == 2
+    lengths = {0: 4 * CS, 1: 300}
+    from repro.core.chunking import construct_chunks, group_chunks
+    from repro.core.chunking import materialize_chunk  # noqa: F401
+    g, s = group_chunks(construct_chunks(lengths, CS))
+    # plan_batch threads the knobs into the plan (shape-dict mesh)
+    p = planner.plan_batch([], [], {"data": 1, "seq": 1}, k=1,
+                           ring_overlap=False, offload_statestore=True,
+                           prefetch_depth=3)
+    assert (p.ring_overlap, p.offload_statestore, p.prefetch_depth) == \
+        (False, True, 3)

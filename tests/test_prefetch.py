@@ -76,3 +76,57 @@ def test_no_thread_leak():
             list(pf)
     time.sleep(0.1)
     assert threading.active_count() <= before + 1
+
+
+# ----------------------------------------- failure paths (ring-overlap PR) --
+def test_exception_behind_full_queue_propagates_without_hang():
+    """The producer dies while the queue is already full of good items: the
+    consumer must receive every item produced before the failure, then the
+    exception — and the worker thread must exit (no orphan blocked on a
+    full-queue put)."""
+    def produce(step):
+        if step == 2:
+            raise RuntimeError("died at 2")
+        return step
+
+    pf = Prefetcher(produce, 10, depth=2)
+    got = []
+    with pytest.raises(RuntimeError, match="died at 2"):
+        deadline = time.time() + 10.0
+        for item in pf:
+            got.append(item)
+            assert time.time() < deadline, "consumer hung"
+    assert got == [0, 1]
+    pf._thread.join(timeout=5.0)
+    assert not pf._thread.is_alive()
+
+
+def test_early_consumer_exit_drains_and_joins():
+    """Consumer takes one item from a long stream and bails: close() must
+    unblock the producer (mid-put on a full queue), drain the buffer, and
+    join the thread — the launch driver's finally-close path."""
+    started = threading.Event()
+
+    def produce(step):
+        started.set()
+        return ("big", step)
+
+    pf = Prefetcher(produce, 10_000, depth=1)
+    assert started.wait(timeout=5.0)
+    assert next(pf) == ("big", 0)
+    pf.close()                        # early exit: 9999 items never consumed
+    assert not pf._thread.is_alive()
+    # the stream is dead after close — no stale buffered items leak out
+    pf.close()                        # idempotent
+
+
+def test_depth_one_and_two_streams_identical():
+    """Prefetch depth changes overlap, never content or order — the same
+    guarantee the offloaded StateStore's bucket prefetch relies on."""
+    def produce(step):
+        return (step, step * 7 % 13)
+
+    one = list(Prefetcher(produce, 25, depth=1))
+    two = list(Prefetcher(produce, 25, depth=2))
+    sync = list(synchronous(produce, 25))
+    assert one == two == sync

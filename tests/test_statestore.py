@@ -1,0 +1,125 @@
+"""PrefixStore unit tests — the host-offloaded versioned prefix buffer.
+
+Drives the store directly (no model forward, no subprocess) through the
+exact access pattern `run_group` uses: ascending F reads/writes, the first
+B event's `drop_device`, then F2 re-reads. The slow CP suite proves
+end-to-end loss/grad equivalence; these tests pin the store's contracts:
+
+  * offload keeps exactly ONE device-resident version during the ascending
+    sweep (vs n+1 without offload) and mirrors every own-bucket to host;
+  * F2 re-reads are exact on every slot chunk i can see (< i*C) — the
+    seg-mask argument that lets one reassembled buffer serve all F2 chunks;
+  * `_needed_buckets` follows the planner's access schedule;
+  * stats (prefetches, host/device bytes) say what happened;
+  * non-offload misses raise; non-KV families silently ignore offload.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import statestore as ss
+from repro.core.chunked_step import alg2_schedule
+
+CFG = ModelConfig(name="tiny-store", family="dense", num_layers=2,
+                  d_model=16, num_heads=2, num_kv_heads=1, head_dim=8,
+                  d_ff=32, vocab_size=17, dtype="float32",
+                  rope_theta=10_000.0)
+C, B, N, K = 4, 2, 5, 2
+CAP = ss.prefix_capacity(N, C)
+
+
+def _owns(seed=0):
+    rng = np.random.RandomState(seed)
+    shape = (CFG.num_layers, B, C, CFG.padded_num_kv_heads,
+             CFG.resolved_head_dim)
+    return [{"k": jnp.asarray(rng.standard_normal(shape), jnp.float32),
+             "v": jnp.asarray(rng.standard_normal(shape), jnp.float32)}
+            for _ in range(N)]
+
+
+def _store(offload, owns, **kw):
+    access = [e[1] for e in alg2_schedule(N, K) if e[0] in ("F", "F2")]
+    store = ss.PrefixStore(CFG, ss.alloc_prefix(CFG, B, CAP), N, C, K,
+                           offload=offload, schedule=access, **kw)
+    for i in range(N):
+        nxt = ss.write_own(CFG, store.get(i), owns[i], i * C)
+        store.put(i + 1, nxt, owns[i])
+    return store
+
+
+def test_offload_bounds_device_versions():
+    owns = _owns()
+    plain, off = _store(False, owns), _store(True, owns)
+    assert len(plain._versions) == N + 1     # every version stays resident
+    assert len(off._versions) == 1           # only the latest
+    assert sorted(off._host) == list(range(N))
+    # latest versions agree bit-for-bit
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 plain.get(N), off.get(N))
+    # stats reflect the residency difference
+    assert off.stats.offloaded and not plain.stats.offloaded
+    assert off.stats.host_bytes > 0 and plain.stats.host_bytes == 0
+    assert off.stats.device_bytes_peak < plain.stats.device_bytes_peak
+
+
+def test_f2_rereads_exact_on_visible_slots():
+    """After drop_device, the reassembled buffer matches each F2 chunk's
+    original version on every slot < i*C (all it can attend to)."""
+    owns = _owns(1)
+    plain, off = _store(False, owns), _store(True, owns)
+    off.drop_device()
+    assert off._versions == {}
+    keep_from = max(N - K, 0)
+    for i in reversed(range(keep_from)):     # the F2 phase, in replay order
+        got, want = off.get(i), plain.get(i)
+        np.testing.assert_array_equal(got["k"][:, :, :i * C],
+                                      want["k"][:, :, :i * C])
+        np.testing.assert_array_equal(got["v"][:, :, :i * C],
+                                      want["v"][:, :, :i * C])
+    # one buffer serves every F2 read; each needed bucket transferred once
+    assert off.stats.prefetches == len(off._needed_buckets())
+    assert off.get(0) is off.get(1)
+
+
+def test_needed_buckets_follow_schedule():
+    owns = _owns()
+    off = _store(True, owns)
+    # highest F2 chunk is keep_from-1 = 2, which reads buckets j < 2
+    assert off._needed_buckets() == [0, 1]
+    # without a schedule the store falls back to the same alg2 bound
+    off2 = ss.PrefixStore(CFG, ss.alloc_prefix(CFG, B, CAP), N, C, K,
+                          offload=True)
+    for i in range(N):
+        off2.put(i + 1, ss.write_own(CFG, off2.get(i), owns[i], i * C),
+                 owns[i])
+    assert off2._needed_buckets() == off._needed_buckets()
+
+
+def test_prefetch_depth_does_not_change_result():
+    owns = _owns(2)
+    a, b = _store(True, owns, prefetch_depth=1), \
+        _store(True, owns, prefetch_depth=3)
+    a.drop_device(), b.drop_device()
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y),
+                 a.get(0), b.get(0))
+    assert a.stats.prefetches == b.stats.prefetches
+
+
+def test_non_offload_miss_raises():
+    owns = _owns()
+    plain = _store(False, owns)
+    with pytest.raises(KeyError):
+        plain.get(N + 3)
+
+
+def test_offload_ignored_for_recurrent_families():
+    cfg = ModelConfig(name="tiny-store-ssm", family="ssm", num_layers=1,
+                      d_model=16, num_heads=0, num_kv_heads=0, head_dim=8,
+                      d_ff=0, vocab_size=17, dtype="float32",
+                      rope_theta=10_000.0, ssm_state=4, ssm_head_dim=4,
+                      ssm_chunk=4)
+    store = ss.PrefixStore(cfg, ss.alloc_prefix(cfg, B, 0), N, C, K,
+                           offload=True)
+    assert not store.offload and not store.stats.offloaded
