@@ -85,7 +85,8 @@ def analyze_row(row):
 
 def run(path="dryrun_results.jsonl", mesh="16x16"):
     try:
-        rows = [json.loads(l) for l in open(path)]
+        with open(path) as fh:
+            rows = [json.loads(line) for line in fh]
     except FileNotFoundError:
         print(f"roofline: {path} not found — run launch/dryrun.py --all first")
         return []

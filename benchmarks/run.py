@@ -154,7 +154,7 @@ def list_sections() -> None:
     """Import + resolve every section; print the registry. A typo in a
     module path or a renamed run() raises here and fails CI's smoke step."""
     print("name,emits_json,title")
-    for name, title, module, entry, kwargs, emits in SECTIONS:
+    for name, title, module, entry, _kwargs, emits in SECTIONS:
         _resolve_entry(name, module, entry)
         print(f"{name},{emits},{title}")
     print(f"[bench] {len(SECTIONS)} sections registered")

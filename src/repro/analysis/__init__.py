@@ -1,0 +1,16 @@
+"""chunklint: static mesh/kernel contract analysis for the ChunkFlow repo.
+
+``python -m repro.analysis src`` walks the source tree and reports
+violations of the contracts the executors rely on but nothing else checks:
+mesh-axis registry discipline, ppermute cycle soundness, custom_vjp
+fwd/bwd pairing, Pallas BlockSpec/grid arity, tracer hygiene, and buffer
+donation safety. Stdlib-only — safe to run before jax is installed.
+"""
+from repro.analysis.core import (  # noqa: F401
+    Baseline,
+    Finding,
+    ModuleCtx,
+    load_axis_registry,
+    run_analysis,
+)
+from repro.analysis.checks import ALL_CHECK_IDS  # noqa: F401

@@ -1,0 +1,100 @@
+"""chunklint CLI.
+
+    PYTHONPATH=src python -m repro.analysis [paths ...]
+        [--baseline src/repro/analysis/baseline.json] [--update]
+        [--axes data,pipe,seq] [--json FILE] [--list-checks]
+
+Exit status: 0 when every finding is suppressed by the baseline (or there
+are none), 1 otherwise. ``--update`` rewrites the baseline from the current
+findings — adopting new ones and pruning stale entries — the same idiom as
+``benchmarks/check_regression.py --update``: run it locally when a finding
+is a documented false positive, then edit the adopted entry's reason and
+commit the diff.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.checks import ALL_CHECK_IDS
+from repro.analysis.core import Baseline, run_analysis
+
+DEFAULT_BASELINE = "src/repro/analysis/baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="chunklint: mesh/kernel contract static analysis")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="suppression allowlist JSON (default: %(default)s)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report every finding")
+    ap.add_argument("--update", action="store_true",
+                    help="adopt current findings into the baseline and "
+                         "prune stale entries")
+    ap.add_argument("--axes", default=None,
+                    help="comma-separated canonical axis names (default: "
+                         "parsed from MESH_AXES in launch/mesh.py)")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="also write the findings report as JSON")
+    ap.add_argument("--list-checks", action="store_true",
+                    help="print every check ID and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_checks:
+        for cid in sorted(ALL_CHECK_IDS):
+            print(f"{cid}  {ALL_CHECK_IDS[cid]}")
+        return 0
+
+    roots = args.paths or ["src"]
+    axes = (frozenset(a.strip() for a in args.axes.split(",") if a.strip())
+            if args.axes else None)
+    findings = run_analysis(roots, axes=axes)
+
+    baseline = Baseline("" if args.no_baseline else args.baseline)
+    if args.update:
+        added, pruned = baseline.update(findings)
+        print(f"chunklint --update: {args.baseline}: "
+              f"{len(added)} adopted, {len(pruned)} pruned, "
+              f"{len(baseline.suppressions)} total suppressions")
+        for k in added:
+            print(f"  + {k}")
+        for k in pruned:
+            print(f"  - {k}")
+        return 0
+
+    unsup, sup, stale = baseline.split(findings)
+    for f in unsup:
+        print(f.render())
+
+    if args.json:
+        payload = {
+            "checks": ALL_CHECK_IDS,
+            "unsuppressed": [vars(f) | {"key": f.key} for f in unsup],
+            "suppressed": [vars(f) | {"key": f.key} for f in sup],
+            "stale_baseline_keys": stale,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+
+    if stale:
+        # stale suppressions rot into blanket permission for future bugs at
+        # the same site — fail closed, same as check_regression's orphan gate
+        print(f"chunklint: {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} (finding no longer "
+              "fires) — run --update to prune:")
+        for k in stale:
+            print(f"  - {k}")
+    summary = (f"chunklint: {len(unsup)} unsuppressed finding(s), "
+               f"{len(sup)} suppressed, {len(stale)} stale baseline entries")
+    print(summary)
+    return 1 if (unsup or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

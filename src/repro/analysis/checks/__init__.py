@@ -1,0 +1,24 @@
+"""chunklint check registry — one module per check family.
+
+Every module exposes ``check(ctx: ModuleCtx) -> list[Finding]`` and a
+``CHECK_IDS`` dict mapping its IDs to one-line descriptions.
+"""
+from __future__ import annotations
+
+from repro.analysis.checks import (
+    custom_vjp,
+    donation,
+    mesh_axes,
+    pallas_blockspec,
+    ppermute_cycles,
+    tracer_hygiene,
+)
+
+_MODULES = (mesh_axes, ppermute_cycles, custom_vjp, pallas_blockspec,
+            tracer_hygiene, donation)
+
+ALL_CHECKS = tuple(m.check for m in _MODULES)
+
+ALL_CHECK_IDS: dict[str, str] = {}
+for _m in _MODULES:
+    ALL_CHECK_IDS.update(_m.CHECK_IDS)

@@ -1,0 +1,210 @@
+"""CF-VJP: jax.custom_vjp contract discipline.
+
+The executors differentiate straight through ``custom_vjp`` attention
+kernels, so a primal/fwd/bwd mismatch is a *silent* wrong-gradient bug (jax
+only validates lazily, at trace time, on the code path that actually runs —
+the analyzer checks every pair at rest).
+
+  CF-VJP01  custom_vjp primal never wired up with f.defvjp(fwd, bwd)
+  CF-VJP02  bwd arity mismatch: params != nondiff + (res, cotangent), or a
+            literal return tuple != number of differentiable primal args
+  CF-VJP03  residual mismatch: fwd packs N residuals, bwd unpacks M
+  CF-VJP04  fwd signature does not match the primal's
+  CF-VJP05  dead nondiff_argnums entry (index out of the primal's range)
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleCtx
+
+CHECK_IDS = {
+    "CF-VJP01": "custom_vjp primal has no defvjp(fwd, bwd) wiring",
+    "CF-VJP02": "custom_vjp bwd arity / return-tuple length mismatch",
+    "CF-VJP03": "custom_vjp residual pack/unpack length mismatch",
+    "CF-VJP04": "custom_vjp fwd signature does not match the primal",
+    "CF-VJP05": "dead nondiff_argnums index (out of the primal's arg range)",
+}
+
+
+def _arity(fn: ast.FunctionDef):
+    """Positional arity, or None when *args makes it open-ended."""
+    if fn.args.vararg is not None:
+        return None
+    return len(fn.args.posonlyargs) + len(fn.args.args)
+
+
+def _custom_vjp_decoration(ctx: ModuleCtx, fn: ast.FunctionDef):
+    """-> (is_custom_vjp, nondiff_argnums tuple or ()) for a FunctionDef."""
+    for dec in fn.decorator_list:
+        if ctx.qualname(dec).endswith("custom_vjp"):
+            return True, ()
+        if isinstance(dec, ast.Call):
+            # @functools.partial(jax.custom_vjp, nondiff_argnums=(...)) or
+            # @jax.custom_vjp(nondiff_argnums=...) style
+            inner = [dec.func] + list(dec.args)
+            if any(ctx.qualname(n).endswith("custom_vjp") for n in inner):
+                nd = ()
+                for kw in dec.keywords:
+                    if kw.arg == "nondiff_argnums" and isinstance(
+                            kw.value, (ast.Tuple, ast.List)):
+                        nd = tuple(e.value for e in kw.value.elts
+                                   if isinstance(e, ast.Constant)
+                                   and isinstance(e.value, int))
+                return True, nd
+    return False, ()
+
+
+def _find_def(ctx: ModuleCtx, name: str, near: ast.AST):
+    """Resolve a function name lexically: prefer the def sharing ``near``'s
+    innermost enclosing function (the nested fwd/bwd-per-closure idiom of
+    kernels/chunked_attention.py, where two closures both define `fwd`)."""
+    hits = [n for n in ast.walk(ctx.tree)
+            if isinstance(n, ast.FunctionDef) and n.name == name]
+    if len(hits) == 1:
+        return hits[0]
+    scope = next(iter(ctx.enclosing_functions(near)), None)
+    in_scope = [h for h in hits
+                if next(iter(ctx.enclosing_functions(h)), None) is scope]
+    return in_scope[0] if len(in_scope) == 1 else None
+
+
+def _residual_pack_len(fwd: ast.FunctionDef):
+    """fwd returns (out, res): length of res when it is a literal tuple."""
+    for node in ast.walk(fwd):
+        if (isinstance(node, ast.Return) and isinstance(node.value, ast.Tuple)
+                and len(node.value.elts) == 2
+                and isinstance(node.value.elts[1], (ast.Tuple, ast.List))):
+            return len(node.value.elts[1].elts)
+    return None
+
+
+def _residual_unpack_len(bwd: ast.FunctionDef, res_name: str):
+    """Length of the first ``a, b, ... = res`` unpacking in bwd."""
+    for node in ast.walk(bwd):
+        if (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == res_name
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], (ast.Tuple, ast.List))):
+            tgts = node.targets[0].elts
+            if any(isinstance(t, ast.Starred) for t in tgts):
+                return None
+            return len(tgts)
+    return None
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        is_cvjp, nondiff = _custom_vjp_decoration(ctx, fn)
+        if not is_cvjp:
+            continue
+        n_primal = _arity(fn)
+
+        if n_primal is not None:
+            dead = [i for i in nondiff if i >= n_primal]
+            if dead:
+                out.append(Finding(
+                    "CF-VJP05", ctx.relpath, fn.lineno, fn.col_offset,
+                    f"nondiff_argnums {dead} out of range for "
+                    f"{fn.name}({n_primal} args)",
+                    hint="drop the dead index — it silently shifts nothing "
+                         "today and the wrong arg after a refactor",
+                    detail=f"{fn.name}:nondiff"))
+
+        # find <fn.name>.defvjp(fwd, bwd), preferring the primal's own scope
+        # (nested per-closure custom_vjp pairs reuse names across closures)
+        fn_scope = next(iter(ctx.enclosing_functions(fn)), None)
+        wiring = None
+        for call in ast.walk(ctx.tree):
+            if (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Attribute)
+                    and call.func.attr == "defvjp"
+                    and isinstance(call.func.value, ast.Name)
+                    and call.func.value.id == fn.name):
+                same_scope = next(
+                    iter(ctx.enclosing_functions(call)), None) is fn_scope
+                if wiring is None or same_scope:
+                    wiring = call
+                if same_scope:
+                    break
+        if wiring is None or len(wiring.args) < 2:
+            out.append(Finding(
+                "CF-VJP01", ctx.relpath, fn.lineno, fn.col_offset,
+                f"custom_vjp function {fn.name!r} is never wired: no "
+                f"{fn.name}.defvjp(fwd, bwd) found",
+                hint="call f.defvjp(fwd, bwd) right after defining the pair "
+                     "— an unwired custom_vjp raises only when first "
+                     "differentiated",
+                detail=f"{fn.name}:defvjp"))
+            continue
+
+        fwd = (_find_def(ctx, wiring.args[0].id, wiring)
+               if isinstance(wiring.args[0], ast.Name) else None)
+        bwd = (_find_def(ctx, wiring.args[1].id, wiring)
+               if isinstance(wiring.args[1], ast.Name) else None)
+
+        if fwd is not None and n_primal is not None:
+            n_fwd = _arity(fwd)
+            if n_fwd is not None and n_fwd != n_primal:
+                out.append(Finding(
+                    "CF-VJP04", ctx.relpath, fwd.lineno, fwd.col_offset,
+                    f"fwd {fwd.name!r} takes {n_fwd} args but primal "
+                    f"{fn.name!r} takes {n_primal}",
+                    hint="fwd receives exactly the primal's arguments "
+                         "(nondiff included)",
+                    detail=f"{fn.name}:fwd-arity"))
+
+        n_expected_ct = (None if n_primal is None
+                         else n_primal - len(nondiff))
+        if bwd is not None:
+            n_bwd = _arity(bwd)
+            if n_bwd is not None and n_bwd != len(nondiff) + 2:
+                out.append(Finding(
+                    "CF-VJP02", ctx.relpath, bwd.lineno, bwd.col_offset,
+                    f"bwd {bwd.name!r} takes {n_bwd} args, expected "
+                    f"{len(nondiff) + 2} (nondiff args + residuals + "
+                    "cotangent)",
+                    hint="bwd signature is (*nondiff, res, ct)",
+                    detail=f"{fn.name}:bwd-arity"))
+            if n_expected_ct is not None:
+                for ret in ast.walk(bwd):
+                    if (isinstance(ret, ast.Return)
+                            and isinstance(ret.value, (ast.Tuple, ast.List))
+                            and not any(isinstance(e, ast.Starred)
+                                        for e in ret.value.elts)
+                            and len(ret.value.elts) != n_expected_ct):
+                        out.append(Finding(
+                            "CF-VJP02", ctx.relpath, ret.lineno,
+                            ret.col_offset,
+                            f"bwd {bwd.name!r} returns "
+                            f"{len(ret.value.elts)} cotangents, expected "
+                            f"{n_expected_ct} (one per differentiable "
+                            "primal arg)",
+                            hint="return None for non-differentiable array "
+                                 "args; arity must still match",
+                            detail=f"{fn.name}:bwd-return"))
+
+        if fwd is not None and bwd is not None:
+            n_res = _residual_pack_len(fwd)
+            n_bwd_args = _arity(bwd)
+            if n_res is not None and n_bwd_args is not None:
+                res_param_idx = len(nondiff)
+                params = bwd.args.posonlyargs + bwd.args.args
+                if res_param_idx < len(params):
+                    n_unpack = _residual_unpack_len(
+                        bwd, params[res_param_idx].arg)
+                    if n_unpack is not None and n_unpack != n_res:
+                        out.append(Finding(
+                            "CF-VJP03", ctx.relpath, bwd.lineno,
+                            bwd.col_offset,
+                            f"fwd {fwd.name!r} packs {n_res} residuals but "
+                            f"bwd {bwd.name!r} unpacks {n_unpack}",
+                            hint="keep the residual tuple and its unpacking "
+                                 "in lockstep — a skew rotates every "
+                                 "residual into the wrong slot",
+                            detail=f"{fn.name}:residuals"))
+    return out

@@ -1,0 +1,148 @@
+"""CF-DN: buffer-donation safety.
+
+``donate_argnums`` hands the argument's device buffer to XLA; touching the
+Python name afterwards dereferences a deleted array ("Array has been
+deleted" — the exact crash PR 3's engine warmup hit on hardware, invisible
+on CPU tests). The check finds call sites of jit-with-donation functions and
+flags donated arguments that are read again afterwards without rebinding;
+inside a loop, a donated name that the call statement does not rebind is
+flagged too (the next iteration re-donates a dead buffer).
+
+  CF-DN01  donated argument referenced after the donating call
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleCtx
+
+CHECK_IDS = {
+    "CF-DN01": "argument donated via donate_argnums is referenced after "
+               "the call",
+}
+
+
+def _donated_positions(ctx: ModuleCtx, call_or_dec: ast.Call):
+    """donate_argnums tuple from a jit(...) / partial(jax.jit, ...) call,
+    chasing a Name through single assignment. None when absent/dynamic."""
+    for kw in call_or_dec.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        val = ctx.resolve_expr(kw.value)
+        if isinstance(val, ast.Constant) and isinstance(val.value, int):
+            return (val.value,)
+        if isinstance(val, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in val.elts):
+            return tuple(e.value for e in val.elts)
+        return None
+    return None
+
+
+def _donating_functions(ctx: ModuleCtx):
+    """-> {local name: donated positions} for jitted-with-donation defs:
+    decorator form (@partial(jax.jit, donate_argnums=...)) and assignment
+    form (step = jax.jit(f, donate_argnums=...))."""
+    table: dict[str, tuple[int, ...]] = {}
+    for fn in ast.walk(ctx.tree):
+        if isinstance(fn, ast.FunctionDef):
+            for dec in fn.decorator_list:
+                if isinstance(dec, ast.Call):
+                    nodes = [dec.func] + list(dec.args)
+                    if any(ctx.qualname(n).split(".")[-1] == "jit"
+                           for n in nodes):
+                        pos = _donated_positions(ctx, dec)
+                        if pos:
+                            table[fn.name] = pos
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            call = node.value
+            if ctx.qualname(call.func).split(".")[-1] == "jit":
+                pos = _donated_positions(ctx, call)
+                if pos:
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            table[tgt.id] = pos
+    return table
+
+
+def _stmt_of(ctx: ModuleCtx, node: ast.AST):
+    """Nearest enclosing statement of an expression node."""
+    cur = node
+    while cur is not None and not isinstance(cur, ast.stmt):
+        cur = ctx.parents.get(cur)
+    return cur
+
+
+def _assigned_names(stmt: ast.stmt) -> set[str]:
+    names: set[str] = set()
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    for tgt in targets:
+        for n in ast.walk(tgt):
+            if isinstance(n, ast.Name):
+                names.add(n.id)
+    return names
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    donating = _donating_functions(ctx)
+    if not donating:
+        return out
+
+    for call in ast.walk(ctx.tree):
+        if not (isinstance(call, ast.Call) and isinstance(call.func, ast.Name)
+                and call.func.id in donating):
+            continue
+        stmt = _stmt_of(ctx, call)
+        if stmt is None:
+            continue
+        scope = next(iter(ctx.enclosing_functions(call)), ctx.tree)
+        rebound = _assigned_names(stmt)
+        cur, in_loop = ctx.parents.get(call), False
+        while cur is not None and not isinstance(
+                cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)):
+            if isinstance(cur, (ast.For, ast.While)):
+                in_loop = True
+            cur = ctx.parents.get(cur)
+
+        for pos in donating[call.func.id]:
+            if pos >= len(call.args):
+                continue
+            arg = call.args[pos]
+            if not isinstance(arg, ast.Name):
+                continue
+            name = arg.id
+            if name in rebound:
+                continue        # params, opt = step(params, batch, opt)
+            later_load = None
+            for n in ast.walk(scope):
+                if (isinstance(n, ast.Name) and n.id == name
+                        and isinstance(n.ctx, ast.Load)
+                        and n.lineno > stmt.lineno and n is not arg
+                        and (later_load is None
+                             or n.lineno < later_load.lineno)):
+                    later_load = n
+            if later_load is not None:
+                out.append(Finding(
+                    "CF-DN01", ctx.relpath, later_load.lineno,
+                    later_load.col_offset,
+                    f"{name!r} is donated to {call.func.id!r} (argnum {pos}, "
+                    f"line {stmt.lineno}) but referenced again here — its "
+                    "buffer is deleted after the call",
+                    hint="rebind the result to the same name "
+                         "(x, ... = f(x, ...)) or stop donating it",
+                    detail=f"{call.func.id}:{pos}:{name}"))
+            elif in_loop:
+                out.append(Finding(
+                    "CF-DN01", ctx.relpath, stmt.lineno, stmt.col_offset,
+                    f"{name!r} is donated to {call.func.id!r} (argnum {pos}) "
+                    "inside a loop without being rebound — the next "
+                    "iteration re-donates a deleted buffer",
+                    hint="rebind the result to the same name each iteration",
+                    detail=f"{call.func.id}:{pos}:{name}:loop"))
+    return out

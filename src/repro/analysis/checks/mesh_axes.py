@@ -1,0 +1,127 @@
+"""CF-AX: mesh-axis registry discipline.
+
+Every axis *string literal* in a collective / sharding call site must come
+from the canonical ``MESH_AXES`` registry in ``launch/mesh.py``. A typo'd
+axis name in a ``PartitionSpec`` is the nastiest failure in the repo: GSPMD
+treats an unknown axis spec as unconstrained/replicated, the program still
+runs, and the loss is wrong-but-plausible.
+
+  CF-AX01  axis literal not in the canonical registry
+  CF-AX02  no MESH_AXES registry found anywhere under the scanned roots
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleCtx
+
+CHECK_IDS = {
+    "CF-AX01": "axis string not in the canonical MESH_AXES registry",
+    "CF-AX02": "no MESH_AXES registry found under the scanned roots",
+}
+
+# callee terminal names whose axis argument(s) we inspect. For each: the
+# positional index of the axis arg (None = kwargs only) and accepted kwargs.
+_COLLECTIVES = {
+    "ppermute": (1, ("axis_name",)),
+    "psum": (1, ("axis_name",)),
+    "pmean": (1, ("axis_name",)),
+    "pmax": (1, ("axis_name",)),
+    "pmin": (1, ("axis_name",)),
+    "all_gather": (1, ("axis_name",)),
+    "all_to_all": (1, ("axis_name",)),
+    "axis_index": (0, ("axis_name",)),
+    "pcast": (1, ("axes",)),
+    "pcast_varying": (1, ("axes",)),
+    "psum_scatter": (1, ("axis_name",)),
+}
+
+# mesh constructors: (positional index of the axis-names arg, kwarg names)
+_MESH_CTORS = {
+    "make_mesh": (1, ("axis_names",)),
+    "Mesh": (1, ("axis_names",)),
+}
+
+
+def _axis_literals(node: ast.AST):
+    """Yield (str, node) for every string literal in an axis-arg expression
+    (plain literal, or nested in tuples/lists for multi-axis collectives)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value, node
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for e in node.elts:
+            yield from _axis_literals(e)
+
+
+def _is_partition_spec(ctx: ModuleCtx, call: ast.Call) -> bool:
+    name = ctx.callee(call)
+    if name == "PartitionSpec":
+        return True
+    if name == "P":
+        # only when this module aliases PartitionSpec to P (the repo idiom:
+        # ``from jax.sharding import PartitionSpec as P``)
+        return ctx.imports.get("P", "").endswith("PartitionSpec")
+    return False
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    if ctx.axes is None:
+        # Report once per module that has axis-bearing call sites, so the
+        # failure mode is loud instead of silently skipping the family.
+        for call in ast.walk(ctx.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            if not (_is_partition_spec(ctx, call)
+                    or ctx.callee(call) in _COLLECTIVES
+                    or ctx.callee(call) in _MESH_CTORS):
+                continue
+            out.append(Finding(
+                "CF-AX02", ctx.relpath, call.lineno, call.col_offset,
+                "cannot validate axis names: no MESH_AXES registry found "
+                "under the scanned roots",
+                hint="declare MESH_AXES = (...) in launch/mesh.py or pass "
+                     "--axes",
+                detail="missing-registry"))
+            return out
+        return out
+
+    def flag(lit: str, node: ast.AST, where: str):
+        out.append(Finding(
+            "CF-AX01", ctx.relpath, node.lineno, node.col_offset,
+            f'axis "{lit}" in {where} is not in the canonical mesh-axis '
+            f"registry {sorted(ctx.axes)}",
+            hint="fix the typo or register the axis in "
+                 "launch/mesh.py MESH_AXES first",
+            detail=f"{where}:{lit}"))
+
+    for call in ast.walk(ctx.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        name = ctx.callee(call)
+        if _is_partition_spec(ctx, call):
+            for arg in call.args:
+                for lit, node in _axis_literals(arg):
+                    if lit not in ctx.axes:
+                        flag(lit, node, "PartitionSpec")
+        elif name in _COLLECTIVES:
+            pos, kws = _COLLECTIVES[name]
+            exprs = []
+            if pos is not None and len(call.args) > pos:
+                exprs.append(call.args[pos])
+            exprs += [kw.value for kw in call.keywords if kw.arg in kws]
+            for e in exprs:
+                for lit, node in _axis_literals(e):
+                    if lit not in ctx.axes:
+                        flag(lit, node, name)
+        elif name in _MESH_CTORS:
+            pos, kws = _MESH_CTORS[name]
+            exprs = []
+            if len(call.args) > pos:
+                exprs.append(call.args[pos])
+            exprs += [kw.value for kw in call.keywords if kw.arg in kws]
+            for e in exprs:
+                for lit, node in _axis_literals(e):
+                    if lit not in ctx.axes:
+                        flag(lit, node, name)
+    return out

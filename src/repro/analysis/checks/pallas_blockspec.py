@@ -1,0 +1,166 @@
+"""CF-PL: Pallas BlockSpec / grid discipline.
+
+Pallas index-map arity errors surface as opaque trace-time explosions (or,
+worse, silently index the wrong block when a lambda swallows an extra grid
+axis through defaults). The contract being checked:
+
+* a BlockSpec index map takes exactly ``grid rank + num_scalar_prefetch``
+  parameters (scalar-prefetch refs are appended to the grid indices);
+* an out_specs block shape has the same rank as the paired ``out_shape``
+  ShapeDtypeStruct;
+* the number of operands passed to the compiled ``pallas_call(...)``
+  matches ``num_scalar_prefetch + len(in_specs)``.
+
+  CF-PL01  index-map lambda arity != grid rank (+ scalar-prefetch count)
+  CF-PL02  out_specs block-shape rank != out_shape rank
+  CF-PL03  operand count != num_scalar_prefetch + len(in_specs)
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleCtx
+
+CHECK_IDS = {
+    "CF-PL01": "BlockSpec index-map arity != grid rank + scalar prefetch",
+    "CF-PL02": "out_specs block-shape rank != out_shape rank",
+    "CF-PL03": "pallas_call operand count != prefetch + len(in_specs)",
+}
+
+
+def _tuple_len(node: ast.AST):
+    return len(node.elts) if isinstance(node, (ast.Tuple, ast.List)) else None
+
+
+def _kwarg(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _block_specs(node: ast.AST, ctx: ModuleCtx):
+    """Direct BlockSpec(...) calls lexically under a specs expression (walks
+    through list/tuple/concat structure; helper-built specs are opaque)."""
+    if node is None:
+        return []
+    return [n for n in ast.walk(node)
+            if isinstance(n, ast.Call) and ctx.callee(n) == "BlockSpec"]
+
+
+def _index_map(spec: ast.Call):
+    im = _kwarg(spec, "index_map")
+    if im is None and len(spec.args) >= 2:
+        im = spec.args[1]
+    return im if isinstance(im, ast.Lambda) else None
+
+
+def _block_shape(spec: ast.Call):
+    bs = _kwarg(spec, "block_shape")
+    if bs is None and spec.args:
+        bs = spec.args[0]
+    return bs
+
+
+def _sds_rank(node: ast.AST, ctx: ModuleCtx):
+    """Rank of a literal-shaped jax.ShapeDtypeStruct(...) call, else None."""
+    node = ctx.resolve_expr(node)
+    if isinstance(node, ast.Call) and ctx.callee(node) == "ShapeDtypeStruct":
+        shape = _kwarg(node, "shape")
+        if shape is None and node.args:
+            shape = node.args[0]
+        return _tuple_len(shape)
+    return None
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    for call in ctx.calls("pallas_call"):
+        grid = ctx.resolve_expr(_kwarg(call, "grid")) \
+            if _kwarg(call, "grid") is not None else None
+        in_specs = _kwarg(call, "in_specs")
+        out_specs = _kwarg(call, "out_specs")
+        n_prefetch = 0
+
+        gs = _kwarg(call, "grid_spec")
+        if gs is not None:
+            gs = ctx.resolve_expr(gs)
+            if isinstance(gs, ast.Call) and ctx.callee(gs) in (
+                    "PrefetchScalarGridSpec", "GridSpec"):
+                pf = _kwarg(gs, "num_scalar_prefetch")
+                if isinstance(pf, ast.Constant) and isinstance(pf.value, int):
+                    n_prefetch = pf.value
+                if _kwarg(gs, "grid") is not None:
+                    grid = ctx.resolve_expr(_kwarg(gs, "grid"))
+                in_specs = in_specs or _kwarg(gs, "in_specs")
+                out_specs = out_specs or _kwarg(gs, "out_specs")
+
+        grid_rank = _tuple_len(grid)
+        want_arity = None if grid_rank is None else grid_rank + n_prefetch
+
+        # --- CF-PL01: index-map arity -----------------------------------
+        if want_arity is not None:
+            for spec in (_block_specs(in_specs, ctx)
+                         + _block_specs(out_specs, ctx)):
+                lam = _index_map(spec)
+                if lam is None or lam.args.vararg is not None:
+                    continue
+                n_lam = len(lam.args.posonlyargs) + len(lam.args.args)
+                if n_lam != want_arity:
+                    out.append(Finding(
+                        "CF-PL01", ctx.relpath, lam.lineno, lam.col_offset,
+                        f"BlockSpec index map takes {n_lam} args but the "
+                        f"grid has rank {grid_rank}"
+                        + (f" + {n_prefetch} scalar-prefetch ref(s)"
+                           if n_prefetch else ""),
+                        hint="index maps receive one arg per grid axis, "
+                             "then one per scalar-prefetch operand",
+                        detail=f"index-map-arity:{n_lam}vs{want_arity}"))
+
+        # --- CF-PL02: out block rank vs out_shape rank -------------------
+        out_shape = _kwarg(call, "out_shape")
+        if out_specs is not None and out_shape is not None:
+            specs_t = (out_specs.elts
+                       if isinstance(out_specs, (ast.Tuple, ast.List))
+                       else [out_specs])
+            shapes_t = (out_shape.elts
+                        if isinstance(out_shape, (ast.Tuple, ast.List))
+                        else [out_shape])
+            if len(specs_t) == len(shapes_t):
+                for spec, sds in zip(specs_t, shapes_t):
+                    if not (isinstance(spec, ast.Call)
+                            and ctx.callee(spec) == "BlockSpec"):
+                        continue
+                    br = _tuple_len(_block_shape(spec))
+                    sr = _sds_rank(sds, ctx)
+                    if br is not None and sr is not None and br != sr:
+                        out.append(Finding(
+                            "CF-PL02", ctx.relpath, spec.lineno,
+                            spec.col_offset,
+                            f"out_specs block shape has rank {br} but the "
+                            f"paired out_shape has rank {sr}",
+                            hint="block shapes index into the full output "
+                                 "shape — the ranks must agree",
+                            detail=f"out-rank:{br}vs{sr}"))
+
+        # --- CF-PL03: operand count -------------------------------------
+        parent = ctx.parents.get(call)
+        if (isinstance(parent, ast.Call) and parent.func is call
+                and not any(isinstance(a, ast.Starred) for a in parent.args)
+                and not parent.keywords):
+            n_in = _tuple_len(in_specs) if isinstance(
+                in_specs, (ast.Tuple, ast.List)) else None
+            if n_in is not None:
+                want = n_prefetch + n_in
+                got = len(parent.args)
+                if got != want:
+                    out.append(Finding(
+                        "CF-PL03", ctx.relpath, parent.lineno,
+                        parent.col_offset,
+                        f"pallas_call invoked with {got} operands but "
+                        f"num_scalar_prefetch({n_prefetch}) + "
+                        f"len(in_specs)({n_in}) = {want}",
+                        hint="scalar-prefetch operands come first, then one "
+                             "array per in_spec",
+                        detail=f"operands:{got}vs{want}"))
+    return out

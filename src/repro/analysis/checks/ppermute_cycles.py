@@ -1,0 +1,146 @@
+"""CF-RING: ppermute permutation soundness.
+
+A ring collective's ``perm`` must be a *total bijection* over the axis: every
+rank sends exactly once and receives exactly once. The motivating near-miss
+is the dk/dv accumulator in ``kernels/chunked_attention.py`` — it rotates
+WITH its kv shard and needs "one final hop home"; writing the shift as
+``[(i, i + 1) for i in range(cp - 1)]`` (a non-cyclic shift) silently drops
+rank cp-1's contribution and XLA will not complain.
+
+Literal pair lists are checked directly; comprehensions over ``range(n)``
+(``[(i, (i + 1) % cp) for i in range(cp)]``) are checked by sampling several
+axis sizes and evaluating the index arithmetic with the core safe evaluator.
+Permutations bound to a name (the ``perm = [...]`` closure idiom) are chased
+through single-assignment bindings.
+
+  CF-RING01  perm is not a bijection (duplicate source or destination)
+  CF-RING02  perm is not total / not closed (sources != destinations set)
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleCtx, safe_eval_int
+
+CHECK_IDS = {
+    "CF-RING01": "ppermute perm has duplicate sources or destinations",
+    "CF-RING02": "ppermute perm is not a total cycle over the axis "
+                 "(source set != destination set)",
+}
+
+_SAMPLE_SIZES = (2, 3, 4, 5, 8)
+
+
+def _pairs_from_literal(node: ast.AST):
+    """[(src, dst), ...] from a literal list/tuple of int-pair literals, or
+    None when any element leaves that grammar."""
+    if not isinstance(node, (ast.List, ast.Tuple)):
+        return None
+    pairs = []
+    for e in node.elts:
+        if not (isinstance(e, (ast.Tuple, ast.List)) and len(e.elts) == 2):
+            return None
+        src = safe_eval_int(e.elts[0], {})
+        dst = safe_eval_int(e.elts[1], {})
+        if src is None or dst is None:
+            return None
+        pairs.append((src, dst))
+    return pairs
+
+
+def _pairs_from_comprehension(node: ast.AST, n: int):
+    """Evaluate ``[(f(i), g(i)) for i in range(N)]`` at axis size ``n``.
+    Returns the pair list, or None when the shape/grammar doesn't match."""
+    if not isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+        return None
+    if len(node.generators) != 1:
+        return None
+    gen = node.generators[0]
+    if gen.ifs or not isinstance(gen.target, ast.Name):
+        return None
+    it = gen.iter
+    if not (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+            and it.func.id == "range" and len(it.args) == 1):
+        return None
+    elt = node.elt
+    if not (isinstance(elt, (ast.Tuple, ast.List)) and len(elt.elts) == 2):
+        return None
+    # free names in the range bound and the pair exprs all get the axis size:
+    # the repo idiom is one size variable (cp) used for both.
+    names = {nd.id for sub in (it.args[0], elt.elts[0], elt.elts[1])
+             for nd in ast.walk(sub) if isinstance(nd, ast.Name)}
+    names.discard(gen.target.id)
+    env = {name: n for name in names}
+    count = safe_eval_int(it.args[0], env)
+    if count is None or count < 0 or count > 64:
+        return None
+    pairs = []
+    for i in range(count):
+        env_i = dict(env, **{gen.target.id: i})
+        src = safe_eval_int(elt.elts[0], env_i)
+        dst = safe_eval_int(elt.elts[1], env_i)
+        if src is None or dst is None:
+            return None
+        pairs.append((src, dst))
+    return pairs
+
+
+def _verdict(pairs):
+    """-> (check_id, problem) or None for a sound permutation."""
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    if len(set(srcs)) != len(srcs):
+        return "CF-RING01", "duplicate source ranks"
+    if len(set(dsts)) != len(dsts):
+        return "CF-RING01", "duplicate destination ranks (two senders " \
+                            "target one rank)"
+    if set(srcs) != set(dsts):
+        return "CF-RING02", (
+            f"source set {sorted(set(srcs))} != destination set "
+            f"{sorted(set(dsts))} — some rank never receives its buffer back")
+    return None
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    for call in ctx.calls("ppermute"):
+        perm = None
+        if len(call.args) >= 3:
+            perm = call.args[2]
+        for kw in call.keywords:
+            if kw.arg == "perm":
+                perm = kw.value
+        if perm is None:
+            continue
+        perm = ctx.resolve_expr(perm)
+
+        lit = _pairs_from_literal(perm)
+        if lit is not None:
+            v = _verdict(lit)
+            if v:
+                cid, problem = v
+                out.append(Finding(
+                    cid, ctx.relpath, call.lineno, call.col_offset,
+                    f"ppermute perm {lit} is unsound: {problem}",
+                    hint="a ring rotation must be a full cycle, e.g. "
+                         "[(i, (i + 1) % n) for i in range(n)]",
+                    detail=f"literal:{lit}"))
+            continue
+
+        for n in _SAMPLE_SIZES:
+            pairs = _pairs_from_comprehension(perm, n)
+            if pairs is None:
+                break                       # grammar mismatch: skip silently
+            v = _verdict(pairs)
+            if v:
+                cid, problem = v
+                out.append(Finding(
+                    cid, ctx.relpath, call.lineno, call.col_offset,
+                    f"ppermute perm is unsound at axis size {n}: {problem} "
+                    f"(evaluated {pairs})",
+                    hint="a ring rotation must be a full cycle, e.g. "
+                         "[(i, (i + 1) % n) for i in range(n)]; shifts that "
+                         "skip ranks or stop at n-1 drop contributions",
+                    detail=f"comprehension@n={n}"))
+                break
+    return out

@@ -1,0 +1,193 @@
+"""CF-TR: tracer hygiene inside jitted / shard_mapped / Pallas bodies.
+
+Two hazards that parse fine and fail (or mislead) only at trace time:
+
+* Python ``if``/``while`` branching on a *traced* expression — a jnp/lax
+  call or ``pl.program_id`` — inside a traced context. These either raise a
+  ConcretizationTypeError on the path that runs, or (with ``program_id``)
+  should have been ``pl.when`` and never fire at all.
+* a host-side ``jnp.*`` value computed in an enclosing function and closed
+  over into a ``shard_map`` body: the constant is baked in replicated at
+  trace time instead of arriving through ``in_specs``, bypassing the
+  sharding contract the specs document.
+
+  CF-TR01  Python if/while on a traced expression in a traced context
+  CF-TR02  host-side jnp value closed over into a shard_map body
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+
+from repro.analysis.core import Finding, ModuleCtx
+
+CHECK_IDS = {
+    "CF-TR01": "Python if/while on a traced expression in a jit/shard_map/"
+               "pallas body",
+    "CF-TR02": "host-side jnp value closed over into a shard_map body",
+}
+
+# callees whose function-valued arguments become traced contexts
+_TRACING_CALLEES = {"shard_map", "pallas_call", "scan", "cond", "while_loop",
+                    "fori_loop", "vjp", "grad", "value_and_grad", "vmap",
+                    "checkpoint", "remat", "jit", "eval_shape"}
+_TRACED_PREFIXES = ("jax.numpy.", "jax.lax.")
+_BUILTINS = frozenset(dir(builtins))
+
+
+def _defs_by_name(ctx: ModuleCtx):
+    table: dict[str, list[ast.FunctionDef]] = {}
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, ast.FunctionDef):
+            table.setdefault(n.name, []).append(n)
+    return table
+
+
+def _is_jit_decorated(ctx: ModuleCtx, fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        if ctx.qualname(dec).split(".")[-1] == "jit":
+            return True
+        if isinstance(dec, ast.Call):
+            nodes = [dec.func] + list(dec.args)
+            if any(ctx.qualname(n).split(".")[-1] in ("jit", "pallas_call")
+                   for n in nodes):
+                return True
+    return False
+
+
+def _traced_contexts(ctx: ModuleCtx):
+    """-> (traced set of FunctionDef, {def: True} passed to shard_map)."""
+    defs = _defs_by_name(ctx)
+    traced: set[ast.FunctionDef] = set()
+    via_shard_map: set[ast.FunctionDef] = set()
+
+    def resolve_fn_arg(arg):
+        if isinstance(arg, ast.Name) and len(defs.get(arg.id, [])) == 1:
+            return defs[arg.id][0]
+        # functools.partial(kernel, ...) wrapping a def
+        if (isinstance(arg, ast.Call)
+                and ctx.callee(arg).split(".")[-1] == "partial"
+                and arg.args and isinstance(arg.args[0], ast.Name)
+                and len(defs.get(arg.args[0].id, [])) == 1):
+            return defs[arg.args[0].id][0]
+        return None
+
+    for fn in ast.walk(ctx.tree):
+        if isinstance(fn, ast.FunctionDef) and _is_jit_decorated(ctx, fn):
+            traced.add(fn)
+    for call in ast.walk(ctx.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        name = ctx.callee(call)
+        if name not in _TRACING_CALLEES:
+            continue
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            fn = resolve_fn_arg(arg)
+            if fn is not None:
+                traced.add(fn)
+                if name == "shard_map":
+                    via_shard_map.add(fn)
+
+    # nested defs inherit the traced context
+    for fn in list(traced):
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.FunctionDef) and sub is not fn:
+                traced.add(sub)
+    return traced, via_shard_map
+
+
+def _traced_test(ctx: ModuleCtx, test: ast.AST):
+    """The jnp/lax/program_id call making a test traced, or None."""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Call):
+            qual = ctx.qualname(node.func)
+            terminal = qual.split(".")[-1]
+            if (qual.startswith(_TRACED_PREFIXES)
+                    or terminal == "program_id"):
+                return qual or terminal
+    return None
+
+
+def _module_globals(ctx: ModuleCtx) -> set[str]:
+    names = set(ctx.imports)
+    for node in ctx.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                for n in ast.walk(tgt):
+                    if isinstance(n, ast.Name):
+                        names.add(n.id)
+    return names
+
+
+def _bound_names(fn: ast.FunctionDef) -> set[str]:
+    """Parameters + every name the body itself binds (incl. nested defs)."""
+    a = fn.args
+    bound = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    for va in (a.vararg, a.kwarg):
+        if va is not None:
+            bound.add(va.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)) and node is not fn:
+            bound.add(node.name)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            bound.add(node.id)
+        elif isinstance(node, ast.Lambda):
+            bound.update(p.arg for p in node.args.args)
+        elif isinstance(node, ast.comprehension):
+            for n in ast.walk(node.target):
+                if isinstance(n, ast.Name):
+                    bound.add(n.id)
+    return bound
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    out: list[Finding] = []
+    traced, via_shard_map = _traced_contexts(ctx)
+
+    for fn in traced:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                qual = _traced_test(ctx, node.test)
+                if qual:
+                    kind = "while" if isinstance(node, ast.While) else "if"
+                    out.append(Finding(
+                        "CF-TR01", ctx.relpath, node.lineno, node.col_offset,
+                        f"Python `{kind}` on traced expression "
+                        f"({qual}(...)) inside traced context "
+                        f"{fn.name!r}",
+                        hint="use jnp.where / lax.cond / pl.when — Python "
+                             "control flow needs a concrete bool and traced "
+                             "values don't have one",
+                        detail=f"{fn.name}:{kind}:{qual}"))
+
+    globals_ = _module_globals(ctx)
+    for fn in via_shard_map:
+        bound = _bound_names(fn)
+        reported = set()
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)):
+                continue
+            name = node.id
+            if (name in bound or name in globals_ or name in _BUILTINS
+                    or name in reported):
+                continue
+            binding = ctx.resolve_name(fn, name)
+            if binding is None:
+                continue
+            if (isinstance(binding, ast.Call)
+                    and ctx.qualname(binding.func).startswith("jax.numpy.")):
+                reported.add(name)
+                out.append(Finding(
+                    "CF-TR02", ctx.relpath, node.lineno, node.col_offset,
+                    f"shard_map body {fn.name!r} closes over host-side jnp "
+                    f"value {name!r} (bound at line {binding.lineno})",
+                    hint="pass it as an operand with an explicit in_spec — "
+                         "closed-over arrays are baked in replicated and "
+                         "bypass the sharding contract",
+                    detail=f"{fn.name}:closure:{name}"))
+    return out

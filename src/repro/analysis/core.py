@@ -1,0 +1,322 @@
+"""chunklint core: findings, per-module AST context, baseline allowlist.
+
+The analyzer is deliberately stdlib-only (``ast`` + ``json``): it must run in
+the CI lint lane before jax is even installed, and importing jax would pull
+device state into what is a pure source-level pass.
+
+Key objects:
+
+* ``Finding`` — one diagnostic: check ID, location, message, fix hint, and a
+  *stable* suppression key (``check_id::relpath::detail``) that survives line
+  churn so baseline entries don't rot on unrelated edits.
+* ``ModuleCtx`` — a parsed module plus the cross-check plumbing every check
+  needs: import-alias resolution (``qualname``), a parent map, and lexical
+  assignment lookup (``resolve_name``) for the ``perm = [...]`` /
+  ``grid = (...)`` closure idioms.
+* ``Baseline`` — the allowlist, same adopt-on-``--update`` idiom as
+  ``benchmarks/check_regression.py``: ``--update`` adopts current findings
+  and prunes stale entries, CI fails on anything unsuppressed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    check_id: str        # e.g. "CF-AX01"
+    path: str            # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    hint: str = ""
+    # short stable discriminator (axis literal, function name, ...) used in
+    # the baseline key instead of line numbers, so suppressions survive edits
+    detail: str = ""
+
+    @property
+    def key(self) -> str:
+        return f"{self.check_id}::{self.path}::{self.detail or self.message}"
+
+    def render(self) -> str:
+        s = f"{self.path}:{self.line}:{self.col}: {self.check_id} {self.message}"
+        if self.hint:
+            s += f"\n    hint: {self.hint}"
+        return s
+
+
+class ModuleCtx:
+    """One parsed source file + the resolution helpers checks share."""
+
+    def __init__(self, path: str, relpath: str, source: str,
+                 axes: frozenset[str] | None):
+        self.path = path
+        self.relpath = relpath.replace(os.sep, "/")
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.axes = axes                     # canonical mesh axes (or None)
+        self.parents: dict[ast.AST, ast.AST] = {}
+        self.imports: dict[str, str] = {}    # local name -> dotted origin
+        self._index()
+
+    def _index(self):
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.imports[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.imports[a.asname or a.name] = (
+                        f"{node.module}.{a.name}")
+
+    # ------------------------------------------------------------ names ----
+    def qualname(self, node: ast.AST) -> str:
+        """Dotted name of a Name/Attribute chain with import aliases
+        resolved: ``pl.pallas_call`` -> "jax.experimental.pallas.pallas_call"
+        (given ``from jax.experimental import pallas as pl``). Unresolvable
+        heads keep their source spelling; non-name nodes -> ""."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return ""
+        head = self.imports.get(node.id, node.id)
+        return ".".join([head] + list(reversed(parts)))
+
+    def callee(self, call: ast.Call) -> str:
+        """Terminal callee name: ``jax.lax.ppermute(...)`` -> "ppermute"."""
+        f = call.func
+        if isinstance(f, ast.Attribute):
+            return f.attr
+        if isinstance(f, ast.Name):
+            return f.id
+        return ""
+
+    def calls(self, *names: str):
+        """Every Call whose terminal callee name is in ``names``."""
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) and self.callee(node) in names:
+                yield node
+
+    # ----------------------------------------------------------- scopes ----
+    def enclosing_functions(self, node: ast.AST):
+        """Innermost-first chain of enclosing FunctionDefs (then Module)."""
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Module)):
+                yield cur
+            cur = self.parents.get(cur)
+
+    def _scope_assigns(self, scope: ast.AST, name: str):
+        """Assignments to ``name`` lexically inside ``scope``, skipping
+        nested function bodies (those are their own scopes)."""
+        out = []
+        stack = list(ast.iter_child_nodes(scope))
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda, ast.ClassDef)):
+                continue
+            if isinstance(n, ast.Assign):
+                for tgt in n.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == name:
+                        out.append(n.value)
+            elif (isinstance(n, ast.AnnAssign) and n.value is not None
+                    and isinstance(n.target, ast.Name)
+                    and n.target.id == name):
+                out.append(n.value)
+            stack.extend(ast.iter_child_nodes(n))
+        return out
+
+    def resolve_name(self, node: ast.AST, name: str):
+        """Nearest lexical binding of ``name`` visible from ``node``: the
+        expression assigned to it in the closest enclosing scope (None when
+        unbound, rebound ambiguously, or bound by a non-Assign)."""
+        for scope in self.enclosing_functions(node):
+            vals = self._scope_assigns(scope, name)
+            if len(vals) == 1:
+                return vals[0]
+            if vals:                 # rebound: ambiguous, refuse to guess
+                return None
+        return None
+
+    def resolve_expr(self, node: ast.AST):
+        """Chase a Name through single-assignment bindings to its value
+        expression; other nodes pass through unchanged."""
+        seen = 0
+        while isinstance(node, ast.Name) and seen < 4:
+            nxt = self.resolve_name(node, node.id)
+            if nxt is None:
+                return node
+            node, seen = nxt, seen + 1
+        return node
+
+
+# ---------------------------------------------------------------- safe eval -
+_ALLOWED_BINOPS = (ast.Add, ast.Sub, ast.Mult, ast.Mod, ast.FloorDiv,
+                   ast.Pow)
+_ALLOWED_CALLS = {"min": min, "max": max, "abs": abs}
+
+
+def safe_eval_int(node: ast.AST, env: dict[str, int]):
+    """Evaluate a small arithmetic expression over ints (the ppermute
+    permutation grammar: +, -, *, %, //, min/max/abs, names bound in env).
+    Returns None when the expression leaves that grammar."""
+    if isinstance(node, ast.Constant):
+        return node.value if isinstance(node.value, int) else None
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = safe_eval_int(node.operand, env)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp) and isinstance(node.op, _ALLOWED_BINOPS):
+        left = safe_eval_int(node.left, env)
+        right = safe_eval_int(node.right, env)
+        if left is None or right is None:
+            return None
+        try:
+            if isinstance(node.op, ast.Add):
+                return left + right
+            if isinstance(node.op, ast.Sub):
+                return left - right
+            if isinstance(node.op, ast.Mult):
+                return left * right
+            if isinstance(node.op, ast.Mod):
+                return left % right
+            if isinstance(node.op, ast.FloorDiv):
+                return left // right
+            if isinstance(node.op, ast.Pow):
+                return left ** right
+        except (ZeroDivisionError, ValueError):
+            return None
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in _ALLOWED_CALLS and not node.keywords):
+        args = [safe_eval_int(a, env) for a in node.args]
+        if any(a is None for a in args):
+            return None
+        return _ALLOWED_CALLS[node.func.id](*args)
+    return None
+
+
+# ----------------------------------------------------------------- baseline -
+class Baseline:
+    """JSON allowlist: {"suppressions": {finding_key: reason}}."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.suppressions: dict[str, str] = {}
+        if path and os.path.exists(path):
+            with open(path) as f:
+                payload = json.load(f)
+            self.suppressions = dict(payload.get("suppressions", {}))
+
+    def split(self, findings: list[Finding]):
+        """-> (unsuppressed, suppressed, stale_keys)."""
+        live = {f.key for f in findings}
+        unsup = [f for f in findings if f.key not in self.suppressions]
+        sup = [f for f in findings if f.key in self.suppressions]
+        stale = sorted(k for k in self.suppressions if k not in live)
+        return unsup, sup, stale
+
+    def update(self, findings: list[Finding]):
+        """Adopt every current finding (keeping existing reasons) and prune
+        entries whose finding no longer fires. Returns (added, pruned)."""
+        live = {f.key for f in findings}
+        added = sorted(k for k in live if k not in self.suppressions)
+        pruned = sorted(k for k in self.suppressions if k not in live)
+        self.suppressions = {
+            k: self.suppressions.get(
+                k, "adopted by --update — document why or fix the code")
+            for k in sorted(live)}
+        payload = {
+            "_comment": ("chunklint suppressions (python -m repro.analysis). "
+                         "Keys are check_id::path::detail — line-stable. "
+                         "--update adopts current findings and prunes stale "
+                         "entries; every entry should say WHY the finding is "
+                         "a false positive or accepted debt."),
+            "suppressions": self.suppressions,
+        }
+        with open(self.path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        return added, pruned
+
+
+# ----------------------------------------------------------- axis registry --
+def load_axis_registry(roots: list[str]) -> frozenset[str] | None:
+    """Find the canonical MESH_AXES tuple by AST (never by import): prefer a
+    ``launch/mesh.py``, else any ``mesh.py``, under the scanned roots."""
+    candidates = []
+    for root in roots:
+        if os.path.isfile(root):
+            root = os.path.dirname(root) or "."
+        for dirpath, _, files in os.walk(root):
+            for fn in files:
+                if fn == "mesh.py":
+                    p = os.path.join(dirpath, fn)
+                    rank = 0 if dirpath.replace(os.sep, "/").endswith(
+                        "launch") else 1
+                    candidates.append((rank, p))
+    for _, p in sorted(candidates):
+        try:
+            with open(p) as f:
+                tree = ast.parse(f.read(), filename=p)
+        except (OSError, SyntaxError):
+            continue
+        for node in tree.body:
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if (isinstance(tgt, ast.Name) and tgt.id == "MESH_AXES"
+                            and isinstance(node.value, (ast.Tuple, ast.List))):
+                        vals = [e.value for e in node.value.elts
+                                if isinstance(e, ast.Constant)
+                                and isinstance(e.value, str)]
+                        if vals:
+                            return frozenset(vals)
+    return None
+
+
+def iter_py_files(roots: list[str]):
+    for root in roots:
+        if os.path.isfile(root):
+            yield root
+            continue
+        for dirpath, dirnames, files in os.walk(root):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for fn in sorted(files):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def run_analysis(roots: list[str], *, axes: frozenset[str] | None = None,
+                 repo_root: str = ".") -> list[Finding]:
+    """Parse every .py under ``roots`` and run all registered checks."""
+    from repro.analysis.checks import ALL_CHECKS
+    if axes is None:
+        axes = load_axis_registry(roots)
+    findings: list[Finding] = []
+    for path in iter_py_files(roots):
+        rel = os.path.relpath(path, repo_root)
+        try:
+            with open(path) as f:
+                source = f.read()
+            ctx = ModuleCtx(path, rel, source, axes)
+        except SyntaxError as e:
+            findings.append(Finding(
+                "CF-PARSE", rel.replace(os.sep, "/"), e.lineno or 0, 0,
+                f"file does not parse: {e.msg}", detail="syntax"))
+            continue
+        for check in ALL_CHECKS:
+            findings.extend(check(ctx))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.check_id))
+    return findings

@@ -36,7 +36,8 @@ def sample_lengths(dist="paper_eval", n: int = 1, seed: int = 0, *,
             cdf = {"paper_eval": PAPER_EVAL_CDF, "lmsys": LMSYS_CDF}[dist]
         except KeyError:
             raise ValueError(f"unknown length distribution {dist!r} "
-                             "(want 'paper_eval', 'lmsys' or a CDF list)")
+                             "(want 'paper_eval', 'lmsys' or a CDF "
+                             "list)") from None
     else:
         cdf = dist
     sampler = LongTailSampler(cdf, min_len=min_len, seed=seed, max_len=max_len)

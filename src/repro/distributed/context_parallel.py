@@ -149,8 +149,12 @@ def run_batch_cp(cfg: ModelConfig, params, batch, plan=None, mesh=None, *,
     """
     if cfg.family != "dense":
         raise NotImplementedError(
-            "context-parallel executor supports stacked dense decoders; "
-            f"family={cfg.family!r}")
+            f"run_batch_cp: config {cfg.name!r} requests family "
+            f"{cfg.family!r}, but the context-parallel executor supports "
+            "only {'dense'} (the ring attention kernel assumes a uniform "
+            "stacked-decoder KV layout). Run this config through "
+            "run_batch (single-device or data-parallel) instead, or lower "
+            "cp to 1 in the ExecutionPlan.")
     from repro.core import chunked_step as cs
 
     groups, standalone, plan = cs.coerce_plan(

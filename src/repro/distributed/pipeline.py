@@ -551,8 +551,12 @@ def run_batch_pipelined(cfg: ModelConfig, params, batch, plan=None,
     """
     if cfg.family != "dense":
         raise NotImplementedError(
-            "pipeline executor supports stacked dense decoders; "
-            f"family={cfg.family!r} (split_stages needs a uniform layer slab)")
+            f"run_batch_pipelined: config {cfg.name!r} requests family "
+            f"{cfg.family!r}, but the pipeline executor supports only "
+            "{'dense'}: split_stages slices a uniform (L, ...) layer slab, "
+            "which moe/ssm/hybrid/audio/vlm param trees don't provide. Run "
+            "this config through run_batch (single-device or data-parallel) "
+            "instead, or set pp=1 in the ExecutionPlan.")
     from repro.core import chunked_step as cs
 
     groups, standalone, plan = cs.coerce_plan(

@@ -211,7 +211,7 @@ def analyze(text: str) -> dict:
     coll_counts = {c: 0.0 for c in COLLECTIVES}
     hbm_bytes = 0.0
     fused = set()
-    for cname, ops in comps.items():
+    for _cname, ops in comps.items():
         for op in ops:
             if op.opcode == "fusion":
                 for m in _CALL_ATTR_RE.finditer(op.attrs):

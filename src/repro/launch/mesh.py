@@ -1,15 +1,43 @@
 """Production mesh builders (functions, never module-level constants — so
-importing this module never touches jax device state)."""
+importing this module never touches jax device state).
+
+This module is also the single source of truth for mesh-axis NAMES:
+``MESH_AXES`` below is the canonical registry that every ``shard_map`` /
+``ppermute`` / ``psum`` / ``PartitionSpec`` axis string in the repo must come
+from. The chunklint static analyzer (``python -m repro.analysis``) parses the
+registry straight out of this file's AST and flags any axis literal outside
+it, so a typo'd axis name fails CI instead of silently becoming replication.
+Add a new axis HERE first, then use it at call sites.
+"""
 from __future__ import annotations
 
 import jax
+
+# Canonical mesh-axis registry (chunklint check CF-AX*). Order is major ->
+# minor as the builders below lay them out:
+#   "pod"   multi-pod data parallelism (production inference mesh)
+#   "data"  data parallelism — wave rows of the chunk planner
+#   "pipe"  pipeline stages — Algorithm 2's rotation ring
+#   "model" tensor/expert parallelism (Megatron TP rules in sharding.py)
+#   "seq"   context parallelism — the K/V ppermute ring, always minor
+MESH_AXES = ("pod", "data", "pipe", "model", "seq")
+
+
+def _check_axes(axes):
+    unknown = [a for a in axes if a not in MESH_AXES]
+    if unknown:
+        raise ValueError(
+            f"unknown mesh axis name(s) {unknown!r}: the canonical registry "
+            f"is MESH_AXES={MESH_AXES!r} (launch/mesh.py) — register new "
+            "axes there before building meshes with them")
+    return axes
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 256 chips (16 data x 16 model). Multi-pod: 2 x 256."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, _check_axes(axes))
 
 
 def make_data_mesh(n_data: int = None):

@@ -86,10 +86,11 @@ def state_to_cache(cfg, params, state, max_seq: int, batch: int):
     if cfg.family == "ssm":
         return state, 0
     raise NotImplementedError(
-        f"state_to_cache only supports attention (dense/moe/vlm) and ssm "
-        f"families; got {cfg.family!r} — build the cache with "
-        f"decode.init_decode_cache and thread the family-specific state "
-        f"(hybrid blocks, audio cross-KV) explicitly")
+        f"state_to_cache: config {cfg.name!r} requests family "
+        f"{cfg.family!r}, but only {{'dense', 'moe', 'vlm', 'ssm'}} are "
+        "supported — build the cache with decode.init_decode_cache and "
+        "thread the family-specific state (hybrid per-block kind dispatch, "
+        "audio cross-KV) explicitly")
 
 
 def generate(cfg, params, prompts, *, gen_len: int, chunk_size: int = 256,
@@ -104,7 +105,7 @@ def generate(cfg, params, prompts, *, gen_len: int, chunk_size: int = 256,
     tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
     out.append(tok)
     pos = T
-    for i in range(gen_len - 1):
+    for _ in range(gen_len - 1):
         logits, cache = step(params, cache, tok, pos)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out.append(tok)

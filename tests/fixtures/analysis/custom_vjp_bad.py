@@ -1,0 +1,64 @@
+"""Seeded CF-VJP violations: unwired primal, bwd arity skew, residual
+pack/unpack skew, dead nondiff index."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def never_wired(x, y):           # CF-VJP01: no defvjp call anywhere
+    return x * y
+
+
+@jax.custom_vjp
+def short_bwd(q, k, v, scale):
+    return q @ k.T * scale + v
+
+
+def short_bwd_fwd(q, k, v, scale):
+    out = q @ k.T * scale + v
+    return out, (q, k, scale)
+
+
+def short_bwd_bwd(res, do):
+    q, k, scale = res
+    # CF-VJP02: 4 primal args, zero nondiff -> must return 4 cotangents
+    return do @ k * scale, do.T @ q * scale, do
+
+
+short_bwd.defvjp(short_bwd_fwd, short_bwd_bwd)
+
+
+@jax.custom_vjp
+def skewed_residuals(x, w):
+    return x @ w
+
+
+def skewed_residuals_fwd(x, w):
+    return x @ w, (x, w, jnp.float32(1.0))
+
+
+def skewed_residuals_bwd(res, do):
+    x, w = res                   # CF-VJP03: fwd packed 3, bwd unpacks 2
+    return do @ w.T, x.T @ do
+
+
+skewed_residuals.defvjp(skewed_residuals_fwd, skewed_residuals_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def dead_nondiff(x, w, b, s):    # CF-VJP05: index 4 out of range(4)
+    return x @ w + b * s
+
+
+def dead_nondiff_fwd(x, w, b, s):
+    return x @ w + b * s, (x, w, s)
+
+
+def dead_nondiff_bwd(flag, res, do):
+    x, w, s = res
+    return do @ w.T, x.T @ do, do * s
+
+
+dead_nondiff.defvjp(dead_nondiff_fwd, dead_nondiff_bwd)

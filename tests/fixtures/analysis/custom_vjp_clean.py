@@ -1,0 +1,41 @@
+"""Clean sibling of custom_vjp_bad: correctly paired custom_vjp in both the
+plain and nondiff_argnums forms (mirrors kernels/chunked_attention.py)."""
+import functools
+
+import jax
+
+
+@jax.custom_vjp
+def attn(q, k, v):
+    return q @ k.T @ v
+
+
+def attn_fwd(q, k, v):
+    out = q @ k.T @ v
+    return out, (q, k, v)
+
+
+def attn_bwd(res, do):
+    q, k, v = res
+    return do @ (k.T @ v).T, (q.T @ do @ v.T).T, (q @ k.T).T @ do
+
+
+attn.defvjp(attn_fwd, attn_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def scaled(x, w, static_scale):
+    return x @ w * static_scale
+
+
+def scaled_fwd(x, w, static_scale):
+    return x @ w * static_scale, (x, w)
+
+
+def scaled_bwd(static_scale, res, do):
+    x, w = res
+    # 3 primal args - 1 nondiff -> 2 cotangents
+    return do @ w.T * static_scale, x.T @ do * static_scale
+
+
+scaled.defvjp(scaled_fwd, scaled_bwd)

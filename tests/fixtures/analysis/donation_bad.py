@@ -1,0 +1,26 @@
+"""Seeded CF-DN01 violations: donated buffers referenced after the call."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 2))
+def step(params, batch, opt):
+    g = jax.tree.map(lambda p: p * batch.mean(), params)
+    new_params = jax.tree.map(lambda p, gg: p - 0.1 * gg, params, g)
+    return new_params, opt
+
+
+def read_after_donation(params, batch, opt):
+    new_params, new_opt = step(params, batch, opt)
+    # CF-DN01: params' buffer was donated to step and is deleted now
+    norm = jax.tree.map(jnp.linalg.norm, params)
+    return new_params, new_opt, norm
+
+
+def loop_without_rebinding(params, batches, opt):
+    for batch in batches:
+        # CF-DN01: next iteration re-donates the same dead buffers
+        out = step(params, batch, opt)
+    return out

@@ -1,0 +1,23 @@
+"""Clean sibling of donation_bad: donated names rebound by the call (the
+train.py idiom), and non-donated args freely reused."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 2))
+def step(params, batch, opt):
+    g = jax.tree.map(lambda p: p * batch.mean(), params)
+    new_params = jax.tree.map(lambda p, gg: p - 0.1 * gg, params, g)
+    return new_params, opt
+
+
+def train_loop(params, batches, opt):
+    for batch in batches:
+        params, opt = step(params, batch, opt)   # rebound: fresh buffers
+    return params, opt
+
+
+def reuse_non_donated(params, batch, opt):
+    params, opt = step(params, batch, opt)
+    return params, opt, batch.sum()              # batch (argnum 1) not donated

@@ -1,0 +1,4 @@
+"""Fixture axis registry — chunklint resolves MESH_AXES from this file's
+AST exactly as it does from src/repro/launch/mesh.py."""
+
+MESH_AXES = ("data", "pipe", "model", "seq")

@@ -1,0 +1,30 @@
+"""Seeded CF-AX01 violations: axis strings outside the fixture registry
+("data", "pipe", "model", "seq")."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.compat import shard_map
+
+
+def typo_in_partition_spec(x, mesh):
+    # "dta" is the classic silent-replication typo
+    spec = P("dta", None)
+    return jax.device_put(x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def typo_in_collective(x):
+    return jax.lax.psum(x, "seqq")
+
+
+def typo_in_mesh_ctor():
+    return jax.make_mesh((2, 2), ("data", "pip"))
+
+
+def typo_in_shard_map_specs(f, mesh, x):
+    return shard_map(f, mesh=mesh, in_specs=(P("data", "sqe"),),
+                     out_specs=P("data"))(x)
+
+
+def typo_in_ppermute(x, cp):
+    perm = [(i, (i + 1) % cp) for i in range(cp)]
+    return jax.lax.ppermute(x, "se", perm)

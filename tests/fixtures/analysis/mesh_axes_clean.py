@@ -1,0 +1,24 @@
+"""Clean sibling of mesh_axes_bad: every axis literal is registered, and
+axis-valued *variables* (unknowable statically) are left alone."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.compat import shard_map
+
+AXIS = "seq"
+
+
+def registered_axes(f, mesh, x):
+    return shard_map(f, mesh=mesh,
+                     in_specs=(P("data", AXIS), P(None, ("data", "seq"))),
+                     out_specs=P("data"))(x)
+
+
+def registered_collective(x, cp):
+    perm = [(i, (i + 1) % cp) for i in range(cp)]
+    x = jax.lax.ppermute(x, "seq", perm)
+    return jax.lax.psum(x, axis_name="data")
+
+
+def registered_mesh():
+    return jax.make_mesh((2, 2, 2), ("data", "pipe", "seq"))

@@ -1,0 +1,75 @@
+"""Seeded CF-PL violations: index-map arity, out-rank skew, operand count."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def wrong_index_map_arity(x, block):
+    B, T, D = x.shape
+    grid = (B, T // block, D // 128)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            # CF-PL01: 3 grid axes, lambda takes 2
+            pl.BlockSpec((1, block, 128), lambda b, it: (b, it, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, 128),
+                               lambda b, it, id_: (b, it, id_)),
+        out_shape=jax.ShapeDtypeStruct((B, T, D), x.dtype),
+    )(x)
+
+
+def _prefetch_kernel(tbl_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def missing_prefetch_ref(x, tables, block):
+    B, T, D = x.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, T // block),
+        in_specs=[
+            # CF-PL01: 2 grid axes + 1 scalar-prefetch ref = 3, lambda takes 2
+            pl.BlockSpec((1, block, D), lambda b, it: (b, it, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, D),
+                               lambda b, it, tbl: (b, it, 0)),
+    )
+    return pl.pallas_call(
+        _prefetch_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), x.dtype),
+    )(tables, x)
+
+
+def wrong_out_rank(x, block):
+    B, T, D = x.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, T // block),
+        in_specs=[pl.BlockSpec((1, block, D), lambda b, it: (b, it, 0))],
+        # CF-PL02: block shape rank 2 vs out_shape rank 3
+        out_specs=pl.BlockSpec((1, block), lambda b, it: (b, it)),
+        out_shape=jax.ShapeDtypeStruct((B, T, D), x.dtype),
+    )(x)
+
+
+def wrong_operand_count(x, y, block):
+    B, T, D = x.shape
+    kernel = functools.partial(_kernel)
+    # CF-PL03: one in_spec, two operands
+    return pl.pallas_call(
+        kernel,
+        grid=(B, T // block),
+        in_specs=[pl.BlockSpec((1, block, D), lambda b, it: (b, it, 0))],
+        out_specs=pl.BlockSpec((1, block, D), lambda b, it: (b, it, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, D), jnp.float32),
+    )(x, y)

@@ -1,0 +1,47 @@
+"""Clean sibling of pallas_bad: the decode_attention shapes — grid and
+grid_spec forms, scalar prefetch refs threaded into every index map."""
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def plain_grid(x, block):
+    B, T, D = x.shape
+    grid = (B, T // block, D // 128)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block, 128), lambda b, it, id_: (b, it, id_)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # no index map: fine
+        ],
+        out_specs=pl.BlockSpec((1, block, 128),
+                               lambda b, it, id_: (b, it, id_)),
+        out_shape=jax.ShapeDtypeStruct((B, T, D), x.dtype),
+    )(x, x)
+
+
+def _prefetch_kernel(tbl_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def prefetch_grid_spec(x, tables, block):
+    B, T, D = x.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, T // block),
+        in_specs=[
+            pl.BlockSpec((1, block, D), lambda b, it, tbl: (tbl[b], it, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, D),
+                               lambda b, it, tbl: (b, it, 0)),
+    )
+    return pl.pallas_call(
+        _prefetch_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), x.dtype),
+    )(tables, x)

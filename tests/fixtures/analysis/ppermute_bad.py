@@ -1,0 +1,27 @@
+"""Seeded CF-RING violations: ppermute permutations that are not total
+bijections over the axis."""
+import jax
+
+
+def non_cyclic_shift(x, cp):
+    # the motivating near-miss: stops at cp-1, rank cp-1's buffer is dropped
+    # and rank 0 never receives — sources {0..cp-2} != destinations {1..cp-1}
+    perm = [(i, i + 1) for i in range(cp - 1)]
+    return jax.lax.ppermute(x, "seq", perm)
+
+
+def even_size_collision(x, cp):
+    # bijective for odd cp only: at cp=4, 0->2 and 2->0 but 1->3 and 3->1 is
+    # fine... while (i * 2) % cp collapses {0, 2} -> 0 at cp=4
+    perm = [(i, (i * 2) % cp) for i in range(cp)]
+    return jax.lax.ppermute(x, "seq", perm)
+
+
+def literal_duplicate_destination(x):
+    return jax.lax.ppermute(x, "seq", perm=[(0, 1), (1, 1), (2, 0)])
+
+
+def clamped_shift(x, cp):
+    # min() clamp makes the last two ranks both target cp-1
+    perm = [(i, min(i + 1, cp - 1)) for i in range(cp)]
+    return jax.lax.ppermute(x, "seq", perm)

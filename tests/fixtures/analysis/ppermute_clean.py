@@ -1,0 +1,31 @@
+"""Clean sibling of ppermute_bad: total cycles in every supported spelling
+(comprehension, closure-bound name, literal, reverse rotation)."""
+import jax
+
+
+def forward_ring(x, cp):
+    perm = [(i, (i + 1) % cp) for i in range(cp)]
+    return jax.lax.ppermute(x, "seq", perm)
+
+
+def reverse_ring(x, cp):
+    return jax.lax.ppermute(x, "seq", [(i, (i - 1) % cp) for i in range(cp)])
+
+
+def closure_bound_ring(cp):
+    # the chunked_attention idiom: perm bound once, used inside a helper
+    perm = [(i, (i + 1) % cp) for i in range(cp)]
+
+    def rotate(*xs):
+        return tuple(jax.lax.ppermute(x, "seq", perm) for x in xs)
+
+    return rotate
+
+
+def literal_swap(x):
+    return jax.lax.ppermute(x, "seq", [(0, 1), (1, 0)])
+
+
+def dynamic_perm(x, perm):
+    # unresolvable statically: must NOT be flagged
+    return jax.lax.ppermute(x, "seq", perm)

@@ -1,0 +1,45 @@
+"""Seeded CF-TR violations: Python control flow on traced values, and a
+host-side jnp value closed over into a shard_map body."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.compat import shard_map
+
+
+@jax.jit
+def branch_on_traced(x):
+    # CF-TR01: jnp.any returns a tracer under jit — needs lax.cond/jnp.where
+    if jnp.any(x > 0):
+        return x * 2
+    return x
+
+
+def _kernel(x_ref, o_ref):
+    # CF-TR01: program_id is a tracer — this must be pl.when
+    if pl.program_id(0) == 0:
+        o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[...] += x_ref[...]
+
+
+def launch(x, block):
+    B, T = x.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, T // block),
+        in_specs=[pl.BlockSpec((1, block), lambda b, it: (b, it))],
+        out_specs=pl.BlockSpec((1, block), lambda b, it: (b, it)),
+        out_shape=jax.ShapeDtypeStruct((B, T), x.dtype),
+    )(x)
+
+
+def closes_over_host_value(mesh, x):
+    scale = jnp.arange(8, dtype=jnp.float32)     # host-side device array
+
+    def body(xs):
+        # CF-TR02: `scale` arrives replicated, bypassing in_specs
+        return xs * scale
+
+    return shard_map(body, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=P("data"))(x)

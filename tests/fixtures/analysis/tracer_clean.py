@@ -1,0 +1,46 @@
+"""Clean sibling of tracer_bad: static-value branching, pl.when, and
+shard_map operands threaded through in_specs."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.compat import shard_map
+
+
+@jax.jit
+def branch_on_static(x, *, flag=True):
+    if flag:                     # static Python bool: fine under jit
+        return jnp.where(x > 0, x * 2, x)
+    return x
+
+
+def _kernel(x_ref, o_ref):
+    ik = pl.program_id(0)
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...]
+
+
+def launch(x, block):
+    B, T = x.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, T // block),
+        in_specs=[pl.BlockSpec((1, block), lambda b, it: (b, it))],
+        out_specs=pl.BlockSpec((1, block), lambda b, it: (b, it)),
+        out_shape=jax.ShapeDtypeStruct((B, T), x.dtype),
+    )(x)
+
+
+def passes_operands(mesh, x):
+    scale = jnp.arange(8, dtype=jnp.float32)
+
+    def body(xs, sc):            # scale is an operand with its own spec
+        return xs * sc
+
+    return shard_map(body, mesh=mesh, in_specs=(P("data"), P()),
+                     out_specs=P("data"))(x, scale)

@@ -1,0 +1,215 @@
+"""chunklint (repro.analysis) test suite.
+
+Three layers, mirroring the ISSUE acceptance criteria:
+
+* fixture corpus: every check family detects its seeded violations
+  (``*_bad.py``) and stays silent on the near-miss-but-valid siblings
+  (``*_clean.py``);
+* self-cleanliness: ``src/`` has zero unsuppressed findings under the
+  committed baseline (and no stale suppressions);
+* baseline round-trip: ``--update`` adopts current findings, a suppressed
+  finding stops failing, and fixing the code prunes the stale entry.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import ALL_CHECK_IDS, Baseline, run_analysis
+from repro.analysis.core import load_axis_registry
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(TESTS_DIR, "fixtures", "analysis")
+REPO = os.path.dirname(TESTS_DIR)
+SRC = os.path.join(REPO, "src")
+BASELINE = os.path.join(SRC, "repro", "analysis", "baseline.json")
+
+# family -> exactly the check IDs its bad fixture must trigger
+FAMILIES = {
+    "mesh_axes": {"CF-AX01"},
+    "ppermute": {"CF-RING01", "CF-RING02"},
+    "custom_vjp": {"CF-VJP01", "CF-VJP02", "CF-VJP03", "CF-VJP05"},
+    "pallas": {"CF-PL01", "CF-PL02", "CF-PL03"},
+    "tracer": {"CF-TR01", "CF-TR02"},
+    "donation": {"CF-DN01"},
+}
+
+
+def analyze_fixture(name: str):
+    return run_analysis(
+        [os.path.join(FIXTURES, name), os.path.join(FIXTURES, "launch")],
+        repo_root=REPO)
+
+
+# ------------------------------------------------------------ fixture corpus -
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_bad_fixture_detected(family):
+    findings = analyze_fixture(f"{family}_bad.py")
+    ids = {f.check_id for f in findings}
+    assert ids == FAMILIES[family], [f.render() for f in findings]
+    # every finding lands in the bad fixture itself, with a line and a hint
+    for f in findings:
+        assert f.path.endswith(f"{family}_bad.py")
+        assert f.line > 0 and f.message
+        assert f.hint, f"finding without a fix hint: {f.render()}"
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_clean_fixture_clean(family):
+    findings = analyze_fixture(f"{family}_clean.py")
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_every_check_id_has_fixture_coverage():
+    covered = set().union(*FAMILIES.values())
+    # CF-VJP04 (fwd arity) is exercised by the injection test below; CF-AX02
+    # is the registry-missing meta-finding, exercised separately.
+    assert covered == set(ALL_CHECK_IDS) - {"CF-VJP04", "CF-AX02"}
+
+
+def test_fwd_arity_and_missing_registry(tmp_path):
+    (tmp_path / "mod.py").write_text(
+        "import jax\n"
+        "from jax.sharding import PartitionSpec as P\n\n\n"
+        "@jax.custom_vjp\n"
+        "def f(x, y):\n"
+        "    return x * y\n\n\n"
+        "def f_fwd(x):\n"
+        "    return x, (x,)\n\n\n"
+        "def f_bwd(res, do):\n"
+        "    (x,) = res\n"
+        "    return do, do\n\n\n"
+        "f.defvjp(f_fwd, f_bwd)\n"
+        "SPEC = P('data')\n")
+    ids = {f.check_id for f in run_analysis([str(tmp_path)])}
+    # no mesh.py with MESH_AXES under the root -> CF-AX02, and the fwd
+    # signature skew -> CF-VJP04
+    assert ids == {"CF-VJP04", "CF-AX02"}
+
+
+def test_finding_keys_are_line_stable():
+    findings = analyze_fixture("mesh_axes_bad.py")
+    for f in findings:
+        assert str(f.line) not in f.key.split("::")[-1]
+        assert f.key.startswith(f"{f.check_id}::")
+
+
+# ---------------------------------------------------------- self-cleanliness -
+def test_src_self_clean():
+    findings = run_analysis([SRC], repo_root=REPO)
+    unsup, _, stale = Baseline(BASELINE).split(findings)
+    assert unsup == [], "\n".join(f.render() for f in unsup)
+    assert stale == [], f"stale baseline entries: {stale}"
+
+
+def test_axis_registry_matches_runtime():
+    from repro.launch.mesh import MESH_AXES
+    assert load_axis_registry([SRC]) == frozenset(MESH_AXES)
+
+
+def test_injected_axis_typo_is_caught(tmp_path):
+    """The acceptance-criterion scratch test: copy a real executor source,
+    typo one axis string, and the analyzer must fail on the copy."""
+    work = tmp_path / "tree"
+    (work / "launch").mkdir(parents=True)
+    shutil.copy(os.path.join(SRC, "repro", "launch", "mesh.py"),
+                work / "launch" / "mesh.py")
+    with open(os.path.join(
+            SRC, "repro", "distributed", "context_parallel.py")) as fh:
+        real = fh.read()
+    assert 'P("data", AXIS)' in real
+    (work / "executor.py").write_text(
+        real.replace('P("data", AXIS)', 'P("dtaa", AXIS)', 1))
+    findings = run_analysis([str(work)])
+    assert any(f.check_id == "CF-AX01" and '"dtaa"' in f.message
+               for f in findings), [f.render() for f in findings]
+    # and the pristine copy stays clean
+    (work / "executor.py").write_text(real)
+    assert run_analysis([str(work)]) == []
+
+
+# ------------------------------------------------------- baseline round-trip -
+def test_baseline_roundtrip(tmp_path):
+    work = tmp_path / "proj"
+    shutil.copytree(os.path.join(FIXTURES, "launch"), work / "launch")
+    shutil.copy(os.path.join(FIXTURES, "ppermute_bad.py"), work / "mod.py")
+    bpath = str(tmp_path / "baseline.json")
+
+    findings = run_analysis([str(work)])
+    assert findings
+    keys = {f.key for f in findings}   # baseline dedups by line-stable key
+
+    # --update adopts every current finding
+    bl = Baseline(bpath)
+    added, pruned = bl.update(findings)
+    assert set(added) == keys and not pruned
+
+    # reloaded baseline suppresses everything, nothing stale
+    unsup, sup, stale = Baseline(bpath).split(run_analysis([str(work)]))
+    assert unsup == [] and len(sup) == len(findings) and stale == []
+
+    # hand-edited reasons survive a no-op --update
+    bl2 = Baseline(bpath)
+    k0 = sorted(bl2.suppressions)[0]
+    bl2.suppressions[k0] = "documented false positive"
+    bl2.update(run_analysis([str(work)]))
+    assert Baseline(bpath).suppressions[k0] == "documented false positive"
+
+    # fixing the code makes the entries stale; --update prunes them
+    shutil.copy(os.path.join(FIXTURES, "ppermute_clean.py"), work / "mod.py")
+    clean = run_analysis([str(work)])
+    unsup, sup, stale = Baseline(bpath).split(clean)
+    assert unsup == [] and sup == [] and set(stale) == keys
+    added, pruned = Baseline(bpath).update(clean)
+    assert not added and set(pruned) == keys
+    assert Baseline(bpath).suppressions == {}
+
+
+# ----------------------------------------------------------------------- CLI -
+def _cli(*args, cwd=REPO):
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=cwd)
+
+
+def test_cli_src_and_exit_codes(tmp_path):
+    r = _cli("src", "--baseline", BASELINE)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    report = str(tmp_path / "report.json")
+    bad = os.path.join(FIXTURES, "mesh_axes_bad.py")
+    r = _cli(bad, os.path.join(FIXTURES, "launch"),
+             "--no-baseline", "--json", report)
+    assert r.returncode == 1
+    with open(report) as fh:
+        payload = json.load(fh)
+    assert payload["unsuppressed"] and payload["stale_baseline_keys"] == []
+    assert {f["check_id"] for f in payload["unsuppressed"]} == {"CF-AX01"}
+
+
+def test_cli_stale_baseline_fails(tmp_path):
+    """A suppression whose finding no longer fires must fail the run (the
+    orphan-gate idiom): stale entries are blanket permission for future
+    bugs at the same site."""
+    bpath = tmp_path / "baseline.json"
+    bpath.write_text(json.dumps(
+        {"suppressions": {"CF-AX01::gone.py::PartitionSpec:xyz": "stale"}}))
+    clean = os.path.join(FIXTURES, "mesh_axes_clean.py")
+    r = _cli(clean, os.path.join(FIXTURES, "launch"),
+             "--baseline", str(bpath))
+    assert r.returncode == 1
+    assert "stale" in r.stdout
+
+
+def test_cli_list_checks():
+    r = _cli("--list-checks")
+    assert r.returncode == 0
+    for cid in ALL_CHECK_IDS:
+        assert cid in r.stdout

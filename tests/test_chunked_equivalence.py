@@ -152,7 +152,7 @@ def test_packed_standalone_equals_separate():
         cfg, params, [m], k=1, loss_scale=1.0 / total)
 
     ref_loss, ref_grads, acc = 0.0, None, None
-    for i, s in seqs.items():
+    for _i, s in seqs.items():
         l, g = full_reference(cfg, params, s)
         w = (len(s) - 1) / total
         ref_loss += float(l) * w
@@ -184,7 +184,7 @@ def test_mixed_batch_run():
     # reference: weighted sum over individual sequences
     total = sum(l - 1 for l in lengths.values())
     ref_loss, acc = 0.0, None
-    for i, s in seqs.items():
+    for _i, s in seqs.items():
         l, g = full_reference(cfg, params, s)
         w = (len(s) - 1) / total
         ref_loss += float(l) * w

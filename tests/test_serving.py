@@ -54,7 +54,7 @@ def test_decode_matches_teacher_forcing(variant):
     cur = jnp.asarray([[seq[-1]]], jnp.int32)
     pos = T
     decode_logits = []
-    for i in range(G):
+    for _ in range(G):
         logits, cache = step(params, cache, cur, pos)
         decode_logits.append(logits[0, 0])
         seq.append(int(jnp.argmax(logits[0, 0])))
